@@ -1,0 +1,71 @@
+"""Paper Figs 21–24 + Table I: the DVFS × (step, scaleFactor) grid on the
+Odroid XU4 model, and the error-constrained optimum.
+
+Paper Table I: big=1500 MHz, LITTLE=1400 MHz, step=1, scale=1.2 under a
+≤10 % error constraint."""
+
+from __future__ import annotations
+
+from .common import save_rows, print_table, pretrained_cascade
+
+
+def run(fast: bool = False, error_rows=None) -> list[dict]:
+    from repro.scheduling.dvfs import dvfs_sweep, optimal_operating_point
+    from repro.scheduling.autotune import error_table, SweepCell
+
+    casc, _ = pretrained_cascade()
+    sizes = casc.stage_sizes()
+
+    if error_rows is None:
+        import json
+        import os
+        from .common import RESULTS_DIR
+        path = os.path.join(RESULTS_DIR, "bench_param_sweep.json")
+        if os.path.exists(path):
+            error_rows = json.load(open(path))
+    if error_rows:
+        cells = [SweepCell(r["step"], r["scaleFactor"], r["n_faces"],
+                           r["TP"], r["FP"], r["FN"]) for r in error_rows]
+        err_model = error_table(cells)
+        steps = sorted({c.step for c in cells})
+        scales = sorted({c.scale_factor for c in cells})
+    else:       # measured-elsewhere fallback: the paper's qualitative shape
+        err_model = lambda s, sf: 0.04 * (1 + 3 * max(s - 2, 0)) \
+            + 0.05 * (sf - 1.1)
+        steps = (1, 2) if fast else (1, 2, 3, 4)
+        scales = (1.2, 1.4) if fast else (1.1, 1.2, 1.35, 1.5)
+
+    points = dvfs_sweep(sizes, err_model,
+                        height=240 if fast else 480,
+                        width=320 if fast else 640,
+                        n_images=2 if fast else 10,
+                        steps=steps, scale_factors=scales)
+    rows = [{
+        "f_big_GHz": p.f_big, "f_LITTLE_GHz": p.f_little, "step": p.step,
+        "scaleFactor": p.scale_factor, "time_s": p.makespan,
+        "energy_J": p.energy, "power_W": p.avg_power,
+        "error_frac": p.error_frac,
+    } for p in points]
+    best = optimal_operating_point(points, max_error=0.10)
+    rows.append({
+        "f_big_GHz": best.f_big, "f_LITTLE_GHz": best.f_little,
+        "step": best.step, "scaleFactor": best.scale_factor,
+        "time_s": best.makespan, "energy_J": best.energy,
+        "power_W": best.avg_power, "error_frac": best.error_frac,
+        "OPTIMUM (Table I)": True,
+    })
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run(fast=fast)
+    opt = [r for r in rows if r.get("OPTIMUM (Table I)")]
+    print_table(rows[:12])
+    print("...")
+    print_table(opt)
+    save_rows("bench_dvfs", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

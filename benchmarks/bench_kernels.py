@@ -1,0 +1,63 @@
+"""Pallas kernel validation sweep + timing.
+
+Sweeps shapes/dtypes for each TPU kernel against the pure-jnp oracle
+(interpret mode — this container has no TPU, so wall numbers time the
+oracle path; correctness is the deliverable here, perf comes from the
+roofline analysis)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import save_rows, print_table, Timer, pretrained_cascade
+
+
+def run(fast: bool = False) -> list[dict]:
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.core.integral import integral_images
+
+    rng = np.random.default_rng(7)
+    casc, _ = pretrained_cascade()
+    shapes = [(64, 128), (96, 96), (128, 256)] if not fast \
+        else [(64, 128), (96, 96)]
+    rows = []
+    for (h, w) in shapes:
+        img = jnp.asarray(rng.integers(0, 255, (h, w)).astype(np.float32))
+        ii_k = ops.integral_image(img, interpret=True, use_kernel=True)
+        ii_r = ops.integral_image(img, use_kernel=False)
+        err = float(jnp.max(jnp.abs(ii_k - ii_r)))
+        with Timer() as t:
+            ops.integral_image(img, use_kernel=False).block_until_ready()
+        rows.append({"kernel": "integral_image", "shape": f"{h}x{w}",
+                     "max_err": err, "ok": err < 1e-3 * h * w,
+                     "ref_us": t.seconds * 1e6})
+
+        ii, ii_pair = integral_images(img)
+        ny, nx = h - 24 + 1, w - 24 + 1
+        inv_k = ops.window_inv_sigma_grid(ii_pair, ny, nx, use_kernel=True)
+        inv_r = ops.window_inv_sigma_grid(ii_pair, ny, nx, use_kernel=False)
+        err = float(jnp.max(jnp.abs(inv_k - inv_r)))
+        rows.append({"kernel": "window_inv_sigma", "shape": f"{ny}x{nx}",
+                     "max_err": err, "ok": err < 1e-3,
+                     "ref_us": None})
+
+        s_k = ops.dense_stage_sums(casc, casc, 0, ii, inv_r)
+        s_r = ops.dense_stage_sums_ref(casc, casc, 0, ii, inv_r)
+        err = float(jnp.max(jnp.abs(s_k - s_r)))
+        rows.append({"kernel": "haar_stage_sums", "shape": f"{ny}x{nx}",
+                     "max_err": err, "ok": err < 1e-2,
+                     "ref_us": None})
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run(fast=fast)
+    print_table(rows)
+    save_rows("bench_kernels", rows)
+    assert all(r["ok"] for r in rows), "kernel mismatch vs oracle"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

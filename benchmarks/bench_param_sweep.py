@@ -1,0 +1,39 @@
+"""Paper Fig 20: total detection error vs (step, scaleFactor).
+
+Paper claims: step is the sensitive knob (error jumps for step > 2,
+optimum 1); scaleFactor degrades slowly."""
+
+from __future__ import annotations
+
+from .common import save_rows, print_table, pretrained_cascade
+
+
+def run(fast: bool = False) -> list[dict]:
+    from repro.scheduling.autotune import accuracy_sweep
+
+    casc, _ = pretrained_cascade()
+    steps = (1, 2) if fast else (1, 2, 3, 4)
+    scales = (1.2, 1.4) if fast else (1.1, 1.2, 1.35, 1.5)
+    cells = accuracy_sweep(casc, steps=steps, scale_factors=scales,
+                           n_images=3 if fast else 6,
+                           height=112 if fast else 128,
+                           width=112 if fast else 128, seed=11)
+    rows = [{
+        "step": c.step, "scaleFactor": c.scale_factor,
+        "n_faces": c.n_faces, "TP": c.true_pos, "FP": c.false_pos,
+        "FN": c.false_neg, "total_error": c.total_error,
+        "error_frac": c.error_frac, "precision": c.precision,
+        "recall": c.recall,
+    } for c in cells]
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run(fast=fast)
+    print_table(rows)
+    save_rows("bench_param_sweep", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

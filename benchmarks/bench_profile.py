@@ -1,0 +1,59 @@
+"""Paper Fig 13: per-phase cost profile of the detector.
+
+The paper's Gperftools profile: evalWeakClassifier 64–66 %,
+runCascadeClassifier ~19 %, int_sqrt (variance) 11–13 %, integralImages
+~2 %.  We reproduce the split from the engine's work model: weak-
+classifier evaluation must dominate, variance second, integral small."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import save_rows, print_table, pretrained_cascade, corpus
+
+
+def run(hw: int = 128, fast: bool = False) -> list[dict]:
+    from repro.core import Detector, EngineConfig
+    from repro.scheduling.dag import (PIX_DOWNSCALE, PIX_INTEGRAL,
+                                      VAR_WINDOW)
+
+    if fast:
+        hw = 96
+    casc, _ = pretrained_cascade()
+    det = Detector(casc, EngineConfig(mode="wave", step=1,
+                                      scale_factor=1.2))
+    img, _ = corpus(1, hw, hw, seed=5)[0]
+    prof = det.work_profile(img)
+
+    weak = float(prof["weak_evals_early_exit"])
+    windows = float(prof["total_windows"])
+    pix = sum(l["windows"] for l in prof["per_level"])  # ≈ pixel count proxy
+    npix = float(hw * hw * 1.45)                        # pyramid sum ≈ 1.45×
+    work = {
+        "evalWeakClassifier": weak,
+        "variance(int_sqrt)": windows * VAR_WINDOW,
+        "integralImages": npix * PIX_INTEGRAL * 2,
+        "downscale(nearestNeighbor)": npix * PIX_DOWNSCALE,
+    }
+    total = sum(work.values())
+    paper = {"evalWeakClassifier": 0.639 + 0.194,   # + runCascade dispatch
+             "variance(int_sqrt)": 0.134,
+             "integralImages": 0.018,
+             "downscale(nearestNeighbor)": 0.012}
+    rows = []
+    for k, v in work.items():
+        rows.append({"phase": k, "work_units": v,
+                     "share": v / total,
+                     "paper_share_odroid": paper.get(k, 0.0)})
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run(fast=fast)
+    print_table(rows)
+    save_rows("bench_profile", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

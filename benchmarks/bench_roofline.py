@@ -1,0 +1,51 @@
+"""Roofline table (deliverable g) — reads the dry-run artifacts produced
+by ``python -m repro.launch.dryrun --all --out artifacts/dryrun_*.json``
+and prints the per-(arch × shape × mesh) three-term roofline."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import save_rows, print_table
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def run(fast: bool = False) -> list[dict]:
+    rows = []
+    for fname in ("dryrun_16x16.json", "dryrun_pod2.json"):
+        path = os.path.join(ARTIFACTS, fname)
+        if not os.path.exists(path):
+            continue
+        for r in json.load(open(path)):
+            if not r.get("ok"):
+                rows.append({"arch": r["arch"], "shape": r["shape"],
+                             "mesh": r["mesh"], "FAILED": r.get("error")})
+                continue
+            roof = r["roofline"]
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "compute_s": roof["compute_s"],
+                "memory_s": roof["memory_s"],
+                "collective_s": roof["collective_s"],
+                "dominant": roof["dominant"].replace("_s", ""),
+                "roofline_frac": roof["roofline_fraction"],
+                "useful_ratio": roof["useful_flops_ratio"],
+                "GiB/device": r["memory"]["bytes_per_device"] / 2 ** 30,
+            })
+    if not rows:
+        rows.append({"note": "run `python -m repro.launch.dryrun --all "
+                             "--out artifacts/dryrun_16x16.json` first"})
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run(fast=fast)
+    print_table(rows)
+    save_rows("bench_roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Fig 16: sequential vs parallel execution time on both boards.
+
+Calibrated DES replay of the detection DAG.  Paper claims: parallel
+reduction ≈ 50 % on RPi 3B+ (4 cores), ≈ 65 % on Odroid XU4 (4+4)."""
+
+from __future__ import annotations
+
+from .common import save_rows, print_table, pretrained_cascade
+
+
+def run(h: int = 480, w: int = 640, n_images: int = 4,
+        fast: bool = False) -> list[dict]:
+    from repro.scheduling import (build_detection_dag, simulate, odroid_xu4,
+                                  rpi3b, SequentialScheduler, FIFOScheduler,
+                                  StaticBlockScheduler, BotlevScheduler,
+                                  HEFTScheduler)
+
+    if fast:
+        h, w, n_images = 240, 320, 2
+    casc, _ = pretrained_cascade()
+    sizes = casc.stage_sizes()
+    dag = build_detection_dag(h, w, sizes, step=1, scale_factor=1.2,
+                              n_images=n_images)
+    platforms = [("odroid-xu4", odroid_xu4()), ("rpi3b+", rpi3b())]
+    scheds = [("sequential", SequentialScheduler),
+              ("omp-static", StaticBlockScheduler),
+              ("fifo(dynamic)", FIFOScheduler),
+              ("heft", HEFTScheduler),
+              ("botlev", BotlevScheduler)]
+    rows = []
+    seq_time = {}
+    for pname, plat in platforms:
+        for sname, mk in scheds:
+            r = simulate(dag, plat, mk())
+            if sname == "sequential":
+                seq_time[pname] = r.makespan
+            rows.append({
+                "platform": pname, "scheduler": sname,
+                "makespan_s": r.makespan,
+                "vs_seq": r.makespan / seq_time[pname],
+                "reduction_pct": 100 * (1 - r.makespan / seq_time[pname]),
+                "avg_power_W": r.avg_power,
+                "energy_J": r.energy,
+                "util": r.cpu_utilization,
+            })
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run(fast=fast)
+    print_table(rows, ["platform", "scheduler", "makespan_s",
+                       "reduction_pct", "avg_power_W", "energy_J", "util"])
+    save_rows("bench_speedup", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_rows(name: str, rows: list[dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    return path
+
+
+def print_table(rows: list[dict], cols: list[str] | None = None) -> None:
+    if not rows:
+        print("(no rows)")
+        return
+    cols = cols or list(rows[0].keys())
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3g}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def pretrained_cascade():
+    from repro.configs.viola_jones import pretrained
+    return pretrained()
+
+
+def corpus(n_images: int, h: int, w: int, faces=(1, 2), seed: int = 0):
+    from repro.core.training.data import render_scene
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_images):
+        nf = int(rng.integers(faces[0], faces[1] + 1))
+        out.append(render_scene(rng, h, w, n_faces=nf))
+    return out

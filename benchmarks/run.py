@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure (+ TPU extras).
+
+    python -m benchmarks.run [--fast] [--only bench_rit,bench_dvfs]
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+BENCHES = [
+    ("bench_kernels", "Pallas kernels vs oracle (shape sweep)"),
+    ("bench_profile", "Fig 13  — per-phase cost profile"),
+    ("bench_rit", "Figs 10–12 — time vs content, RIT relation"),
+    ("bench_speedup", "Fig 16  — seq vs parallel, both boards"),
+    ("bench_energy", "Figs 17–18 — modeled energy + optimized point"),
+    ("bench_param_sweep", "Fig 20  — error vs step/scaleFactor"),
+    ("bench_dvfs", "Figs 21–24 + Table I — DVFS grid + optimum"),
+    ("bench_detector", "Tables II/III — ours vs dense reference"),
+    ("bench_serving", "beyond-paper: cascade early-exit LM serving"),
+    ("bench_roofline", "roofline table from dry-run artifacts"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    for name, desc in BENCHES:
+        if only and name not in only:
+            continue
+        print(f"\n=== {name}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main(fast=args.fast)
+            print(f"[{name} done in {time.time() - t0:.1f}s]")
+        except Exception:                                # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+    print("\n" + ("ALL BENCHMARKS PASSED" if not failures else
+                  f"FAILURES: {failures}"))
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from the dry-run
+artifacts (artifacts/dryrun_*.json).  Prints markdown to stdout."""
+
+import json
+import sys
+
+ART = {"16x16": "artifacts/dryrun_16x16.json",
+       "pod2x16x16": "artifacts/dryrun_pod2.json"}
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def main():
+    rows = []
+    for mesh, path in ART.items():
+        try:
+            rows += json.load(open(path))
+        except FileNotFoundError:
+            print(f"<!-- missing {path} -->")
+    print("### Dry-run results (lower + compile per cell)\n")
+    print("| arch | shape | mesh | compile | GiB/device | coll GiB/dev |"
+          " status |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - |"
+                  f" FAILED: {r.get('error', '?')[:60]} |")
+            continue
+        mem = r["memory"].get("bytes_per_device", 0) / 2 ** 30
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r['t_compile_s']:.0f}s | {mem:.2f} "
+              f"| {r['collective_bytes'] / 2 ** 30:.1f} | ok |")
+
+    print("\n### Roofline table (single-pod 16×16; terms per step)\n")
+    print("| arch | shape | compute | memory | collective | dominant "
+          "| roofline frac | useful ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if not r.get("ok") or r["mesh"] != "16x16":
+            continue
+        f = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(f['compute_s'])} "
+              f"| {fmt_s(f['memory_s'])} | {fmt_s(f['collective_s'])} "
+              f"| {f['dominant'].replace('_s', '')} "
+              f"| {f['roofline_fraction']:.3f} "
+              f"| {f['useful_flops_ratio']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

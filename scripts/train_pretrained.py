@@ -1,0 +1,17 @@
+"""Train the shipped pretrained cascade (stronger config, background run)."""
+import sys
+sys.path.insert(0, "/root/repo/src")
+import numpy as np
+from repro.core.training import train_cascade, TrainConfig
+from repro.core import save_cascade
+
+cfg = TrainConfig(n_stages=14, n_pos=1200, n_neg=1200, max_features=3500,
+                  max_weak_per_stage=60, stage_fpr=0.4, stage_dr=0.997,
+                  seed=7, verbose=True)
+casc, info = train_cascade(cfg)
+save_cascade("/root/repo/src/repro/configs/pretrained/synthetic_face_v2.npz",
+             casc, {"config": cfg._asdict(), "stages": info["stages"],
+                    "overall_dr": info["overall_dr"],
+                    "overall_fpr": info["overall_fpr"]})
+print("DONE", casc.n_weak, "wc", casc.n_stages, "stages",
+      "DR", info["overall_dr"], "FPR", info["overall_fpr"])

@@ -1,0 +1,28 @@
+"""The paper's own architecture: the 25-stage / 2913-weak-classifier Haar
+cascade (paper §4).  ``paper_cascade()`` returns the paper-shaped cascade
+(performance benchmarks); ``pretrained()`` loads the AdaBoost-trained
+synthetic-face cascade (accuracy experiments)."""
+
+from __future__ import annotations
+
+import os
+
+from repro.core.cascade import paper_shaped_cascade, load_cascade
+
+PRETRAINED_DIR = os.path.join(os.path.dirname(__file__), "pretrained")
+DEFAULT_PRETRAINED = os.path.join(PRETRAINED_DIR, "synthetic_face_v2.npz")
+
+# paper §5/§7 experiment constants
+STEP = 1
+SCALE_FACTOR = 1.2
+DETECTION_WINDOW = 24
+N_STAGES = 25
+N_WEAK = 2913
+
+
+def paper_cascade(seed: int = 0):
+    return paper_shaped_cascade(seed)
+
+
+def pretrained(path: str = DEFAULT_PRETRAINED):
+    return load_cascade(path)

@@ -1,0 +1,93 @@
+"""Integral images (Viola-Jones Eq. 3) — pure-jnp reference layer.
+
+Conventions
+-----------
+``integral_image`` returns the *padded* summed-area table of shape (H+1, W+1)
+with a zero top row / left column, so that the sum of pixels inside the
+half-open rectangle ``[y0, y0+h) x [x0, x0+w)`` is::
+
+    ii[y0+h, x0+w] - ii[y0, x0+w] - ii[y0+h, x0] + ii[y0, x0]
+
+(4 memory accesses — Fig. 4 of the paper).
+
+dtype: float32 throughout.  For uint8 images up to 1024x1024 the maximum
+cumulative value is ~2.7e8, i.e. the f32 ulp at the top-right corner is ~16
+pixel units; rectangle *differences* used by 24x24-window Haar features are
+self-consistent with the training pipeline (which uses the same arithmetic),
+so this loss does not affect detection.  The squared integral image reaches
+~6.8e10 where the f32 ulp is ~4096; window variance over 24x24 windows is
+O(1e7), so ``window_variance`` uses a mean-centred formulation to keep the
+relative error of sigma below 1e-4 (see ``window_inv_sigma``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "integral_image",
+    "integral_images",
+    "rect_sum",
+    "window_inv_sigma",
+    "integral_value",
+]
+
+
+def integral_image(img: jax.Array) -> jax.Array:
+    """Padded summed-area table, shape (H+1, W+1), float32."""
+    img = img.astype(jnp.float32)
+    ii = jnp.cumsum(jnp.cumsum(img, axis=0), axis=1)
+    return jnp.pad(ii, ((1, 0), (1, 0)))
+
+
+def integral_images(img: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(integral, squared-integral) of a grayscale image.
+
+    The squared integral is computed over the *mean-centred* image to keep
+    float32 cancellation error small (see module docstring); the constant
+    shift cancels in the variance identity used by :func:`window_inv_sigma`.
+    """
+    img = img.astype(jnp.float32)
+    mu = jnp.mean(img)
+    centred = img - mu
+    ii = integral_image(img)
+    ii2 = integral_image(centred * centred)
+    # Also need the centred first-moment table to reconstruct the window
+    # variance exactly:  var = E[(x-mu)^2] - (E[x-mu])^2.
+    iic = integral_image(centred)
+    return ii, jnp.stack([ii2, iic])
+
+
+def rect_sum(ii: jax.Array, ys: jax.Array, xs: jax.Array,
+             h: jax.Array, w: jax.Array) -> jax.Array:
+    """Sum of pixels in ``[ys, ys+h) x [xs, xs+w)`` — broadcasts over ys/xs."""
+    y1 = ys + h
+    x1 = xs + w
+    return ii[y1, x1] - ii[ys, x1] - ii[y1, xs] + ii[ys, xs]
+
+
+def window_inv_sigma(ii_pair: jax.Array, ys: jax.Array, xs: jax.Array,
+                     window: int) -> jax.Array:
+    """1 / sigma for each detection window (paper Eq. 5, float-safe form).
+
+    ``ii_pair`` is the stacked (ii2, iic) pair returned by
+    :func:`integral_images`.  sigma is the per-pixel standard deviation of
+    the window, clamped to >= 1 so flat windows do not blow up the
+    normalized feature values (same guard as the reference C code's
+    ``int_sqrt`` path).
+    """
+    n = float(window * window)
+    ii2, iic = ii_pair[0], ii_pair[1]
+    s2 = rect_sum(ii2, ys, xs, window, window)      # sum (x-mu)^2
+    s1 = rect_sum(iic, ys, xs, window, window)      # sum (x-mu)
+    var = s2 / n - (s1 / n) ** 2
+    sigma = jnp.sqrt(jnp.maximum(var, 1.0))
+    return 1.0 / sigma
+
+
+def integral_value(img: jax.Array) -> jax.Array:
+    """The paper's 'integral value' — the bottom-right entry of the SAT,
+    i.e. the sum of every pixel in the image (used by the RIT relation,
+    Eq. 6)."""
+    return jnp.sum(img.astype(jnp.float32))

@@ -1,0 +1,77 @@
+"""Detection grouping — the equivalent of OpenCV's ``groupRectangles``.
+
+Raw cascade output fires on many neighbouring windows/scales around a true
+face; detections are clustered by rectangle similarity (union-find over an
+eps-overlap predicate) and clusters with fewer than ``min_neighbors`` members
+are discarded.  Host-side numpy: runs on the (small) set of accepted windows
+after the device pipeline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["group_rectangles", "iou_matrix"]
+
+
+def _similar(r1: np.ndarray, r2: np.ndarray, eps: float) -> bool:
+    delta = eps * (min(r1[2], r2[2]) + min(r1[3], r2[3])) * 0.5
+    return (abs(r1[0] - r2[0]) <= delta and abs(r1[1] - r2[1]) <= delta
+            and abs(r1[0] + r1[2] - r2[0] - r2[2]) <= delta
+            and abs(r1[1] + r1[3] - r2[1] - r2[3]) <= delta)
+
+
+def group_rectangles(rects: np.ndarray, min_neighbors: int = 3,
+                     eps: float = 0.2) -> np.ndarray:
+    """Cluster (N, 4) [x, y, w, h] rects; return (M, 4) cluster means.
+
+    Mirrors OpenCV semantics: clusters of size < min_neighbors+1 are kept
+    only if min_neighbors == 0.
+    """
+    rects = np.asarray(rects, np.float64).reshape(-1, 4)
+    n = len(rects)
+    if n == 0:
+        return np.zeros((0, 4), np.int32)
+
+    parent = np.arange(n)
+
+    def find(i):
+        while parent[i] != i:
+            parent[i] = parent[parent[i]]
+            i = parent[i]
+        return i
+
+    for i in range(n):
+        for j in range(i + 1, n):
+            if _similar(rects[i], rects[j], eps):
+                ri, rj = find(i), find(j)
+                if ri != rj:
+                    parent[rj] = ri
+
+    roots = np.array([find(i) for i in range(n)])
+    out = []
+    for root in np.unique(roots):
+        members = rects[roots == root]
+        if len(members) >= max(min_neighbors, 1) or min_neighbors == 0:
+            out.append(members.mean(axis=0))
+    if not out:
+        return np.zeros((0, 4), np.int32)
+    return np.rint(np.stack(out)).astype(np.int32)
+
+
+def iou_matrix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Pairwise IoU between (N,4) and (M,4) [x,y,w,h] boxes (for eval)."""
+    a = np.asarray(a, np.float64).reshape(-1, 4)
+    b = np.asarray(b, np.float64).reshape(-1, 4)
+    ax1, ay1 = a[:, 0], a[:, 1]
+    ax2, ay2 = a[:, 0] + a[:, 2], a[:, 1] + a[:, 3]
+    bx1, by1 = b[:, 0], b[:, 1]
+    bx2, by2 = b[:, 0] + b[:, 2], b[:, 1] + b[:, 3]
+    ix = np.maximum(0, np.minimum(ax2[:, None], bx2[None]) -
+                    np.maximum(ax1[:, None], bx1[None]))
+    iy = np.maximum(0, np.minimum(ay2[:, None], by2[None]) -
+                    np.maximum(ay1[:, None], by1[None]))
+    inter = ix * iy
+    area_a = (a[:, 2] * a[:, 3])[:, None]
+    area_b = (b[:, 2] * b[:, 3])[None]
+    return inter / np.maximum(area_a + area_b - inter, 1e-9)

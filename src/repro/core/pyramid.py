@@ -1,0 +1,56 @@
+"""Image pyramid (paper §4, Fig. 7): the detection window stays 24x24 and the
+*image* is repeatedly downscaled by ``scale_factor`` with nearest-neighbour
+interpolation ("algorithm based on pixel neighborhoods"), until the image no
+longer contains a full window.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .cascade import WINDOW
+
+__all__ = ["PyramidLevel", "pyramid_plan", "downscale_nearest", "build_pyramid"]
+
+
+class PyramidLevel(NamedTuple):
+    height: int
+    width: int
+    scale: float  # original_size / level_size
+
+
+def pyramid_plan(height: int, width: int, scale_factor: float = 1.2,
+                 min_size: int = WINDOW) -> list[PyramidLevel]:
+    """Static (host-side) plan of pyramid level shapes.
+
+    Shapes must be known before tracing, so the plan is computed in Python;
+    the per-level downscale + detection is then jitted per shape.
+    """
+    levels: list[PyramidLevel] = []
+    s = 1.0
+    while True:
+        h = int(math.floor(height / s))
+        w = int(math.floor(width / s))
+        if h < min_size or w < min_size:
+            break
+        levels.append(PyramidLevel(h, w, s))
+        s *= scale_factor
+    return levels
+
+
+def downscale_nearest(img: jax.Array, out_h: int, out_w: int) -> jax.Array:
+    """Nearest-neighbour resize (the reference C code's ``nearestNeighbor``)."""
+    h, w = img.shape
+    ys = (jnp.arange(out_h) * h) // out_h
+    xs = (jnp.arange(out_w) * w) // out_w
+    return img[ys[:, None], xs[None, :]]
+
+
+def build_pyramid(img: jax.Array, scale_factor: float = 1.2,
+                  min_size: int = WINDOW) -> list[tuple[jax.Array, PyramidLevel]]:
+    plan = pyramid_plan(img.shape[0], img.shape[1], scale_factor, min_size)
+    return [(downscale_nearest(img, lv.height, lv.width), lv) for lv in plan]

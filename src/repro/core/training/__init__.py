@@ -1,0 +1,3 @@
+from .data import (FaceCorpus, make_face, make_background, make_decoy,  # noqa: F401
+                   render_scene, sample_negative, window_dataset)
+from .adaboost import train_cascade, TrainConfig  # noqa: F401

@@ -1,0 +1,341 @@
+"""AdaBoost training of an attentional cascade (paper §3, Fig. 3).
+
+Faithful to the published procedure:
+
+- weak classifiers are decision stumps over normalized Haar-feature values
+  (polarity p, threshold theta — Eq. 2);
+- each boosting round selects the (feature, theta, p) minimizing the
+  weighted error via the classic sorted-cumulative-weights scan;
+- weights update ``w <- w * beta^(1-e)`` with ``beta = eps/(1-eps)`` and the
+  vote weight is ``alpha = log(1/beta)`` (Fig. 3);
+- the cascade is *attentional*: stage ``s`` trains on all positives plus the
+  negatives that survive stages ``< s`` (hard-negative mining from fresh
+  procedural backgrounds), and each stage's strong threshold is lowered from
+  ``0.5 * sum(alpha)`` until the stage detection rate target is met — the
+  DR/FPR product design of Eq. 4.
+
+The feature-selection inner loop is jitted (it is pure dense linear algebra
+on an (N windows x F features) value matrix), which is what makes training
+tractable on this container.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..cascade import Cascade, WINDOW, MAX_RECTS, make_cascade
+from .data import window_dataset, sample_negative
+
+__all__ = ["TrainConfig", "train_cascade", "feature_pool", "feature_values"]
+
+_AREA = float(WINDOW * WINDOW)
+
+
+class TrainConfig(NamedTuple):
+    n_stages: int = 8
+    stage_fpr: float = 0.45        # per-stage false-positive target (f_i)
+    stage_dr: float = 0.995        # per-stage detection-rate floor (d_i)
+    max_weak_per_stage: int = 40
+    feature_stride: int = 3        # position stride of the feature pool
+    size_stride: int = 3           # size stride of the feature pool
+    max_features: int = 3000       # random subsample cap of the pool
+    n_pos: int = 1000
+    n_neg: int = 1000
+    seed: int = 0
+    verbose: bool = False
+
+
+# ---------------------------------------------------------------- features
+def feature_pool(cfg: TrainConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Enumerate 2/3-rect Haar features (Fig. 2) on a strided grid.
+
+    Returns (rect_xywh (F,3,4) int32, rect_w (F,3) float32).
+    """
+    rects, weights = [], []
+    ps, ss = cfg.feature_stride, cfg.size_stride
+    for y in range(0, WINDOW - 2, ps):
+        for x in range(0, WINDOW - 2, ps):
+            for h in range(2, WINDOW - y + 1, ss):
+                for w in range(2, WINDOW - x + 1, ss):
+                    # 2-rect horizontal (left/right)
+                    if x + 2 * w <= WINDOW:
+                        rects.append([(x, y, w, h), (x + w, y, w, h),
+                                      (0, 0, 0, 0)])
+                        weights.append((1.0, -1.0, 0.0))
+                    # 2-rect vertical (top/bottom)
+                    if y + 2 * h <= WINDOW:
+                        rects.append([(x, y, w, h), (x, y + h, w, h),
+                                      (0, 0, 0, 0)])
+                        weights.append((1.0, -1.0, 0.0))
+                    # 3-rect horizontal
+                    if x + 3 * w <= WINDOW:
+                        rects.append([(x, y, w, h), (x + w, y, w, h),
+                                      (x + 2 * w, y, w, h)])
+                        weights.append((1.0, -2.0, 1.0))
+                    # 3-rect vertical
+                    if y + 3 * h <= WINDOW:
+                        rects.append([(x, y, w, h), (x, y + h, w, h),
+                                      (x, y + 2 * h, w, h)])
+                        weights.append((1.0, -2.0, 1.0))
+    rect_xywh = np.asarray(rects, np.int32)
+    rect_w = np.asarray(weights, np.float32)
+    if len(rect_xywh) > cfg.max_features:
+        rng = np.random.default_rng(cfg.seed + 1)
+        keep = rng.choice(len(rect_xywh), cfg.max_features, replace=False)
+        keep.sort()
+        rect_xywh, rect_w = rect_xywh[keep], rect_w[keep]
+    return rect_xywh, rect_w
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def _feature_values_jit(windows: jax.Array, rect_xywh: jax.Array,
+                        rect_w: jax.Array, chunk: int = 512) -> jax.Array:
+    """Normalized feature values: (N, F) = f(window, feature)/(sigma*area)."""
+    n = windows.shape[0]
+    ii = jnp.cumsum(jnp.cumsum(windows, axis=1), axis=2)
+    ii = jnp.pad(ii, ((0, 0), (1, 0), (1, 0)))           # (N, 25, 25)
+    iif = ii.reshape(n, -1)
+    wdim = WINDOW + 1
+
+    mean = windows.mean(axis=(1, 2))
+    var = (windows ** 2).mean(axis=(1, 2)) - mean ** 2
+    inv_sigma = 1.0 / jnp.sqrt(jnp.maximum(var, 1.0))     # (N,)
+
+    x0 = rect_xywh[..., 0]
+    y0 = rect_xywh[..., 1]
+    x1 = x0 + rect_xywh[..., 2]
+    y1 = y0 + rect_xywh[..., 3]
+
+    def corner(yy, xx):                                    # (F, 3) -> (N,F,3)
+        idx = yy * wdim + xx
+        return iif[:, idx.reshape(-1)].reshape(n, *idx.shape)
+
+    def do_chunk(sl_x0, sl_y0, sl_x1, sl_y1, sl_w):
+        s = (corner(sl_y1, sl_x1) - corner(sl_y0, sl_x1)
+             - corner(sl_y1, sl_x0) + corner(sl_y0, sl_x0))
+        return (s * sl_w[None]).sum(-1)
+
+    f = rect_xywh.shape[0]
+    outs = []
+    for c0 in range(0, f, chunk):
+        c1 = min(c0 + chunk, f)
+        outs.append(do_chunk(x0[c0:c1], y0[c0:c1], x1[c0:c1], y1[c0:c1],
+                             rect_w[c0:c1]))
+    vals = jnp.concatenate(outs, axis=1)
+    return vals * inv_sigma[:, None] / _AREA
+
+
+def feature_values(windows: np.ndarray, rect_xywh: np.ndarray,
+                   rect_w: np.ndarray) -> np.ndarray:
+    return np.asarray(_feature_values_jit(
+        jnp.asarray(windows, jnp.float32), jnp.asarray(rect_xywh),
+        jnp.asarray(rect_w)))
+
+
+# ---------------------------------------------------------------- boosting
+@jax.jit
+def _best_stump(vals_sorted: jax.Array, order: jax.Array, w: jax.Array,
+                y: jax.Array):
+    """Best (feature, threshold, polarity) under weights ``w``.
+
+    vals_sorted: (N, F) feature values pre-sorted along N.
+    order:       (N, F) argsort indices that produced vals_sorted.
+    Returns (eps, feat_idx, theta, polarity, pred_all (N,)).
+    """
+    ws = w[order]                       # weights in sorted order  (N, F)
+    ys = y[order]                       # labels  in sorted order  (N, F)
+    wpos = jnp.where(ys == 1, ws, 0.0)
+    wneg = jnp.where(ys == 0, ws, 0.0)
+    spos = jnp.cumsum(wpos, axis=0)     # pos weight at or below i
+    sneg = jnp.cumsum(wneg, axis=0)
+    tpos = spos[-1]
+    tneg = sneg[-1]
+    # threshold between i and i+1 → classify "face" for values <= v_i
+    eps_p = sneg + (tpos - spos)        # polarity +1: f < theta → face
+    eps_m = spos + (tneg - sneg)        # polarity -1: f > theta → face
+    eps = jnp.minimum(eps_p, eps_m)
+    flat = jnp.argmin(eps)
+    i, f = jnp.unravel_index(flat, eps.shape)
+    pol = jnp.where(eps_p[i, f] <= eps_m[i, f], 1, -1)
+    # midpoint threshold (guard the upper edge)
+    v_i = vals_sorted[i, f]
+    v_n = vals_sorted[jnp.minimum(i + 1, vals_sorted.shape[0] - 1), f]
+    theta = jnp.where(i + 1 < vals_sorted.shape[0], 0.5 * (v_i + v_n),
+                      v_i + 1e-6)
+    vals_f = jnp.take(vals_sorted, f, axis=1)  # sorted column — need original
+    # reconstruct original-order predictions for feature f
+    inv = jnp.argsort(jnp.take(order, f, axis=1))
+    orig_vals = vals_f[inv]
+    pred = jnp.where(pol == 1, orig_vals < theta, orig_vals > theta)
+    return eps[i, f], f, theta, pol, pred
+
+
+class _Stump(NamedTuple):
+    feat: int
+    theta: float
+    polarity: int
+    alpha: float
+
+
+def _boost_stage(vals: np.ndarray, y: np.ndarray, cfg: TrainConfig,
+                 stage_id: int):
+    """Train one stage; returns (stumps, stage_threshold, stage_scores_fn)."""
+    n = len(y)
+    n_pos = int(y.sum())
+    n_neg = n - n_pos
+    w = np.where(y == 1, 0.5 / max(n_pos, 1), 0.5 / max(n_neg, 1))
+
+    jvals = jnp.asarray(vals)
+    order = jnp.argsort(jvals, axis=0)
+    vals_sorted = jnp.take_along_axis(jvals, order, axis=0)
+
+    stumps: list[_Stump] = []
+    scores = np.zeros(n, np.float64)     # running sum alpha_t * h_t
+    alpha_sum = 0.0
+    for t in range(cfg.max_weak_per_stage):
+        w = w / w.sum()
+        eps, f, theta, pol, pred = _best_stump(
+            vals_sorted, order, jnp.asarray(w, jnp.float32),
+            jnp.asarray(y))
+        eps = float(np.clip(np.asarray(eps), 1e-10, 1 - 1e-10))
+        pred = np.asarray(pred)
+        beta = eps / (1.0 - eps)
+        alpha = float(np.log(1.0 / beta))
+        e = (pred != (y == 1)).astype(np.float64)   # 0 correct / 1 wrong
+        w = w * np.power(beta, 1.0 - e)
+        stumps.append(_Stump(int(f), float(theta), int(pol), alpha))
+        scores += alpha * pred
+        alpha_sum += alpha
+
+        # stage threshold: lower from alpha_sum/2 until DR target met
+        pos_scores = scores[y == 1]
+        thr = 0.5 * alpha_sum
+        if len(pos_scores):
+            q = np.quantile(pos_scores, 1.0 - cfg.stage_dr)
+            thr = min(thr, q - 1e-9)
+        neg_scores = scores[y == 0]
+        fpr = float((neg_scores >= thr).mean()) if len(neg_scores) else 0.0
+        dr = float((pos_scores >= thr).mean()) if len(pos_scores) else 1.0
+        if cfg.verbose:
+            print(f"  stage {stage_id} t={t} eps={eps:.3f} fpr={fpr:.3f} "
+                  f"dr={dr:.3f}")
+        if fpr <= cfg.stage_fpr and dr >= cfg.stage_dr:
+            break
+    return stumps, float(thr)
+
+
+def _stage_scores(stumps, thr, vals):
+    s = np.zeros(vals.shape[0], np.float64)
+    for st in stumps:
+        v = vals[:, st.feat]
+        pred = (v < st.theta) if st.polarity == 1 else (v > st.theta)
+        s += st.alpha * pred
+    return s >= thr
+
+
+def train_cascade(cfg: TrainConfig = TrainConfig()):
+    """Train an attentional cascade on the procedural corpus.
+
+    Returns (cascade, info) where info carries per-stage DR/FPR history.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    rect_xywh, rect_w = feature_pool(cfg)
+    corpus = window_dataset(rng, cfg.n_pos, cfg.n_neg)
+    pos_windows = corpus.windows[corpus.labels == 1]
+    neg_windows = corpus.windows[corpus.labels == 0]
+
+    pos_vals = feature_values(pos_windows, rect_xywh, rect_w)
+
+    all_stumps: list[list[_Stump]] = []
+    stage_thresholds: list[float] = []
+    info = {"stages": [], "pool_size": len(rect_xywh)}
+
+    def mine_negatives(n_needed: int) -> np.ndarray:
+        """Fresh negatives (backgrounds + decoys) passing all stages so far."""
+        got = []
+        attempts = 0
+        while sum(len(g) for g in got) < n_needed and attempts < 60:
+            attempts += 1
+            batch = np.stack([sample_negative(rng)
+                              for _ in range(max(n_needed * 2, 256))])
+            v = feature_values(batch, rect_xywh, rect_w)
+            keep = np.ones(len(batch), bool)
+            for st, th in zip(all_stumps, stage_thresholds):
+                keep &= _stage_scores(st, th, v)
+                if not keep.any():
+                    break
+            if keep.any():
+                got.append(batch[keep])
+        if not got:
+            return np.zeros((0, WINDOW, WINDOW), np.float32)
+        return np.concatenate(got)[:n_needed]
+
+    cur_neg = neg_windows
+    t0 = time.time()
+    for s in range(cfg.n_stages):
+        if len(cur_neg) < max(8, cfg.n_neg // 10):
+            if cfg.verbose:
+                print(f"stage {s}: not enough hard negatives — stop early")
+            break
+        windows = np.concatenate([pos_windows, cur_neg])
+        y = np.concatenate([np.ones(len(pos_windows), np.int32),
+                            np.zeros(len(cur_neg), np.int32)])
+        neg_vals = feature_values(cur_neg, rect_xywh, rect_w)
+        vals = np.concatenate([pos_vals, neg_vals])
+        stumps, thr = _boost_stage(vals, y, cfg, s)
+        all_stumps.append(stumps)
+        stage_thresholds.append(thr)
+        pass_pos = _stage_scores(stumps, thr, pos_vals)
+        pass_neg = _stage_scores(stumps, thr, neg_vals)
+        info["stages"].append({
+            "n_weak": len(stumps),
+            "dr": float(pass_pos.mean()),
+            "fpr": float(pass_neg.mean()),
+        })
+        if cfg.verbose:
+            print(f"stage {s}: weak={len(stumps)} dr={pass_pos.mean():.3f} "
+                  f"fpr={pass_neg.mean():.3f} ({time.time()-t0:.1f}s)")
+        # keep only positives that pass (cascade semantics) — standard VJ
+        # keeps all positives; we follow the paper (DR product, Eq. 4) and
+        # keep all positives but mine surviving negatives.
+        cur_neg = cur_neg[pass_neg]
+        if len(cur_neg) < cfg.n_neg:
+            extra = mine_negatives(cfg.n_neg - len(cur_neg))
+            if len(extra):
+                cur_neg = np.concatenate([cur_neg, extra])
+
+    # -------- pack stumps into the flat Cascade arrays
+    n_wc = sum(len(st) for st in all_stumps)
+    rx = np.zeros((n_wc, MAX_RECTS, 4), np.int32)
+    rw = np.zeros((n_wc, MAX_RECTS), np.float32)
+    th = np.zeros(n_wc, np.float32)
+    lv = np.zeros(n_wc, np.float32)
+    rv = np.zeros(n_wc, np.float32)
+    offs = [0]
+    k = 0
+    for stumps in all_stumps:
+        for st in stumps:
+            rx[k] = rect_xywh[st.feat]
+            rw[k] = rect_w[st.feat]
+            if st.polarity == 1:
+                # f < theta → vote alpha
+                th[k], lv[k], rv[k] = st.theta, st.alpha, 0.0
+            else:
+                # f > theta → vote alpha  ⇔  f < theta → 0
+                th[k], lv[k], rv[k] = st.theta, 0.0, st.alpha
+            k += 1
+        offs.append(k)
+    cascade = make_cascade(rx, rw, th, lv, rv, np.asarray(offs, np.int32),
+                           np.asarray(stage_thresholds, np.float32))
+    info["train_seconds"] = time.time() - t0
+    info["overall_dr"] = float(np.prod([s["dr"] for s in info["stages"]])) \
+        if info["stages"] else 0.0
+    info["overall_fpr"] = float(np.prod([s["fpr"] for s in info["stages"]])) \
+        if info["stages"] else 1.0
+    return cascade, info

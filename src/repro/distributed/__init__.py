@@ -1,0 +1,3 @@
+# Distribution layer: sharding rules (DP/TP/EP/SP + ZeRO), gradient
+# compression, fault tolerance / straggler handling.
+from .sharding import ShardingRules, make_rules  # noqa: F401

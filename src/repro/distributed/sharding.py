@@ -1,0 +1,274 @@
+"""PartitionSpec rules: DP / TP(+EP) / SP / ZeRO over the production mesh.
+
+Logical axes
+------------
+- ``dp``   — batch data parallelism: ("data",) or ("pod", "data").
+- ``tp``   — tensor/expert parallelism: "model" (heads, d_ff, vocab,
+             experts; sequence dim of decode caches).
+- ``fsdp`` — parameter/optimizer-state sharding (ZeRO): the "data" axis.
+
+Rules are *name-based* over parameter pytree paths (the init functions in
+``repro.models`` use stable key names), so one table covers all ten
+architectures.  Dims that do not divide the axis size are still legal —
+GSPMD pads — the roofline table prices that waste and the perf log
+(EXPERIMENTS.md §Perf) removes it where it dominates.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "make_rules", "param_pspecs", "P"]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh | None
+    dp: tuple = ("data",)          # batch axes
+    tp: str | None = "model"       # tensor-parallel axis
+    fsdp: tuple | str | None = "data"  # ZeRO param/opt-state axes (None = off)
+    seq_shard_decode: bool = True  # shard decode caches over tp on seq
+    sp: bool = True                # Megatron-style sequence parallelism:
+    #                                residual stream sharded over tp on seq
+    #                                between blocks (same collective volume
+    #                                as TP — all-reduce ≡ ag+rs — but scan
+    #                                carries / saved activations shrink by
+    #                                the tp degree)
+
+    # -------------------------------------------------------- activations
+    def act(self, x, *axes):
+        """with_sharding_constraint with logical axis names
+        ('dp'|'tp'|None per dim)."""
+        if self.mesh is None:
+            return x
+        spec = P(*[self._ax(a) for a in axes])
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def spec(self, *axes) -> P:
+        return P(*[self._ax(a) for a in axes])
+
+    def named(self, *axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+    def _ax(self, a):
+        if a is None:
+            return None
+        if a == "dp":
+            return self.dp if len(self.dp) > 1 else self.dp[0]
+        if a == "tp":
+            return self.tp
+        if a == "fsdp":
+            return self.fsdp
+        return a
+
+
+def make_rules(mesh: Mesh | None, *, fsdp: bool = True,
+               seq_shard_decode: bool = True, sp: bool = True
+               ) -> ShardingRules:
+    if mesh is None:
+        return ShardingRules(None)
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names) or (names[0],)
+    tp = "model" if "model" in names else None
+    fs = dp if fsdp else None          # ZeRO across every batch axis
+    return ShardingRules(mesh, dp, tp, fs, seq_shard_decode, sp)
+
+
+# ------------------------------------------------------------------ params
+# Rule table: (path suffix match) → spec builder on (shape, rules).
+# 'd'=fsdp axis, 'm'=tp axis, '-'=replicated.  Leading layer-stack dims
+# (from scan stacking) are detected by ndim and left unsharded.
+
+def _leaf_spec(path: tuple[str, ...], ndim_extra: int,
+               r: ShardingRules) -> P:
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    gp = path[-3] if len(path) >= 3 else ""
+    d, m = r.fsdp, r.tp
+
+    def pad(*dims):
+        return P(*([None] * ndim_extra), *dims)
+
+    # ---- embeddings / heads
+    if name == "embedding":
+        return pad(m, d)                      # (V, D)
+    if name == "lm_head":
+        return pad(d, m)                      # (D, V)
+    if name == "prefix_proj":
+        return pad(d, None)
+
+    # ---- biases / norms / scalars
+    if name in ("scale", "bias", "b"):
+        if parent in ("wq", "wk", "wv", "wi", "wg"):
+            return pad(m)                     # TP-column bias
+        return pad(None)
+    if name in ("A_log", "dt_bias", "D_skip", "lam"):
+        return pad(m)
+
+    # ---- MoE
+    if parent == "router":
+        return pad(None, None)                # (D, E) fp32, replicated
+    if gp == "moe" or parent == "moe":
+        if name == "wi" or name == "wg":
+            return pad(m, d, None)            # (E, D, F)
+        if name == "wo":
+            return pad(m, None, d)            # (E, F, D)
+
+    # ---- MLA projections
+    if parent in ("wkv_a", "wq_a"):
+        return pad(d, None)
+    if parent in ("wq_b", "wk_b", "wv_b"):
+        return pad(d, m)
+
+    # ---- SSD / RG-LRU
+    if parent in ("wB", "wC", "wdt"):
+        return pad(d, None)
+    if parent in ("conv_B", "conv_C"):
+        return pad(None, None)
+    if parent == "conv_x" or parent == "conv":
+        return pad(m, None)                   # depthwise (channels, width)
+    if name == "blocks" and parent == "gate":
+        return pad(m, None, None)             # block-diagonal gate (H, w, w)
+
+    # ---- generic dense: column-parallel in, row-parallel out
+    if parent in ("wq", "wk", "wv", "wi", "wg", "wz", "wx", "wy",
+                  "in_proj", "exit_head"):
+        return pad(d, m)                      # (D, F)
+    if parent in ("wo", "out_proj"):
+        return pad(m, d)                      # (F, D)
+    if name == "w":
+        return pad(d, None)
+    return pad(*([None] * 0))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def enforce_divisibility(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes that do not evenly divide the array dim — uneven
+    GSPMD padding of *inputs* is rejected by jit in_shardings, and the
+    waste it hides is better priced explicitly (EXPERIMENTS.md §Roofline
+    'padding' notes)."""
+    fixed = []
+    for i, dim in enumerate(shape):
+        entry = spec[i] if i < len(spec) else None
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        fixed.append(entry)
+    return P(*fixed)
+
+
+def param_pspecs(params_shape, rules: ShardingRules):
+    """Map an eval_shape'd parameter pytree to PartitionSpecs.
+
+    Leading stacked-layer dims (scan) are inferred: rule specs are written
+    for the *unstacked* leaf rank; extra leading dims stay unsharded.
+    Non-divisible dims fall back to replicated (see enforce_divisibility).
+    """
+    def one(path, leaf):
+        keys = tuple(getattr(k, "key", getattr(k, "idx", None))
+                     for k in path)
+        keys = tuple(str(k) for k in keys)
+        base = _base_rank(keys)
+        extra = max(leaf.ndim - base, 0) if base is not None else 0
+        spec = _leaf_spec(keys, extra, rules)
+        if rules.mesh is not None:
+            spec = enforce_divisibility(spec, leaf.shape, rules.mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def _base_rank(path: tuple[str, ...]) -> int | None:
+    """Intrinsic (unstacked) rank of a parameter, from its name."""
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    gp = path[-3] if len(path) >= 3 else ""
+    if name in ("scale", "bias", "b", "A_log", "dt_bias", "D_skip", "lam"):
+        return 1
+    if name in ("embedding", "lm_head", "prefix_proj"):
+        return 2
+    if (gp == "moe" or parent == "moe") and name in ("wi", "wg", "wo"):
+        return 3
+    if parent == "gate" and name == "blocks":
+        return 3
+    if parent in ("conv_x", "conv", "conv_B", "conv_C"):
+        return 2
+    return 2            # generic dense kernels
+
+
+def cache_pspecs(cache_shape, cfg, rules: ShardingRules):
+    """PartitionSpecs for decode/prefill caches.
+
+    KV / latent caches shard their *sequence* dim over the tp axis
+    (flash-decode style: per-shard partial softmax, LSE-combined by the
+    partitioner) and batch over dp — this is what lets a 32k-cache ×
+    128-batch decode fit 16 GB/chip.  Small windowed/recurrent states
+    shard batch only.  Stacked scan dims (leading) stay unsharded."""
+    dp = rules.dp if len(rules.dp) > 1 else (rules.dp[0]
+                                             if rules.dp else None)
+    m = rules.tp if rules.seq_shard_decode else None
+
+    def one(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        name = keys[-1]
+        in_scan = "scan" in keys
+        lead = (None,) if in_scan else ()
+        if name == "len":
+            return P()
+        if name in ("ckv", "krope"):            # (B, S, d)
+            return P(*lead, dp, m, None)
+        if name in ("k", "v"):                  # (B, S, H, Dh)
+            if cfg.rglru is not None:           # small window ring
+                return P(*lead, dp, None, None, None)
+            return P(*lead, dp, m, None, None)
+        if name == "h":                         # rglru state (B, W)
+            return P(*lead, dp, rules.tp)
+        if name == "state":                     # ssd (B, H, N, P)
+            return P(*lead, dp, rules.tp, None, None)
+        if name == "conv":                      # (B, cw-1, C)
+            return P(*lead, dp, None, rules.tp)
+        return P(*lead, *([None] * (leaf.ndim - len(lead))))
+
+    def one_checked(path, leaf):
+        spec = one(path, leaf)
+        if rules.mesh is not None:
+            spec = enforce_divisibility(spec, leaf.shape, rules.mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one_checked, cache_shape)
+
+
+def batch_pspecs(batch_shape, rules: ShardingRules):
+    """Input batches: dim 0 (global batch) over dp, rest replicated."""
+    dp = rules.dp if len(rules.dp) > 1 else (rules.dp[0]
+                                             if rules.dp else None)
+
+    def one(leaf):
+        spec = P(dp, *([None] * (leaf.ndim - 1)))
+        if rules.mesh is not None:
+            spec = enforce_divisibility(spec, leaf.shape, rules.mesh)
+        return spec
+
+    return jax.tree.map(one, batch_shape)
+
+
+def shardings_for(params_shape, rules: ShardingRules):
+    """NamedShardings for jit in_shardings (None mesh → None)."""
+    if rules.mesh is None:
+        return None
+    specs = param_pspecs(params_shape, rules)
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the paper's compute hot-spots (Fig. 13 profile):
+#   integral_image   — tiled 2-pass SAT scan (integralImages, 1.8-1.9%)
+#   haar_stage       — stage/weak-classifier eval (evalWeakClassifier +
+#                      runCascadeClassifier, 83-85%)
+#   window_variance  — per-window normalization (int_sqrt, 11-13%)
+# ops.py = jit'd wrappers; ref.py = pure-jnp oracles.
+from . import ops, ref  # noqa: F401

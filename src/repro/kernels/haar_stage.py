@@ -1,0 +1,108 @@
+"""Haar cascade stage evaluation — Pallas TPU kernel (the paper's hotspot).
+
+``evalWeakClassifier`` + ``runCascadeClassifier`` are 83–85 % of the paper's
+sequential runtime (Fig. 13).  The CPU code walks windows one by one and,
+per window, gathers 4 SAT corners per rectangle.  That access pattern is
+hostile to a vector unit, so the TPU kernel inverts the loop structure:
+
+  * a *tile of window origins* (8 x 128, one per VPU lane) is evaluated
+    simultaneously;
+  * for a fixed weak classifier, the SAT corner of rectangle r for every
+    window in the tile is the **same 2-D slice of the SAT shifted by a
+    constant** — so each rectangle costs 4 dynamic-slice loads of an
+    (8, 128) block from the VMEM-resident SAT and pure element-wise VPU
+    arithmetic.  No gathers anywhere.
+  * weak-classifier geometry (rect x/y/w/h), weights, thresholds and votes
+    are **scalar-prefetched into SMEM** so the slice offsets are scalars —
+    the TPU-legal way to do data-dependent addressing.
+
+The kernel computes one stage's summed votes for every window in the tile;
+the engine applies the stage threshold and handles early-exit/compaction
+(see repro.core.engine).  Stride-1 window grids only (the engine routes
+strided/compacted evaluation to the gather oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.cascade import WINDOW
+
+DEFAULT_TILE = (8, 128)
+_INV_AREA = 1.0 / float(WINDOW * WINDOW)
+
+
+def _stage_kernel(rx_ref, rw_ref, th_ref, lv_ref, rv_ref,  # SMEM (prefetch)
+                  ii_ref, inv_ref, o_ref, *, tile, n_weak):
+    ty, tx = tile
+    y0 = pl.program_id(0) * ty
+    x0 = pl.program_id(1) * tx
+    inv_sigma = inv_ref[...]
+
+    def rect_sum(k, r):
+        x = rx_ref[k, r, 0]
+        y = rx_ref[k, r, 1]
+        w = rx_ref[k, r, 2]
+        h = rx_ref[k, r, 3]
+        a = pl.load(ii_ref, (pl.ds(y0 + y, ty), pl.ds(x0 + x, tx)))
+        b = pl.load(ii_ref, (pl.ds(y0 + y, ty), pl.ds(x0 + x + w, tx)))
+        c = pl.load(ii_ref, (pl.ds(y0 + y + h, ty), pl.ds(x0 + x, tx)))
+        d = pl.load(ii_ref, (pl.ds(y0 + y + h, ty), pl.ds(x0 + x + w, tx)))
+        return (d - b) - (c - a)
+
+    def body(k, acc):
+        feat = jnp.zeros(tile, jnp.float32)
+        for r in range(3):                    # static unroll: ≤3 rects
+            feat = feat + rw_ref[k, r] * rect_sum(k, r)
+        f_norm = feat * inv_sigma * _INV_AREA
+        vote = jnp.where(f_norm < th_ref[k], lv_ref[k], rv_ref[k])
+        return acc + vote
+
+    o_ref[...] = jax.lax.fori_loop(0, n_weak, body,
+                                   jnp.zeros(tile, jnp.float32))
+
+
+def haar_stage_sums_kernel(rect_xywh: jax.Array, rect_w: jax.Array,
+                           wc_threshold: jax.Array, left_val: jax.Array,
+                           right_val: jax.Array, ii_padded: jax.Array,
+                           inv_sigma: jax.Array, *, tile=DEFAULT_TILE,
+                           interpret: bool = True) -> jax.Array:
+    """Stage sums over a stride-1 window grid.
+
+    ii_padded: (ny_pad + WINDOW, nx_pad + WINDOW) padded SAT (the wrapper
+      guarantees every slice the kernel takes is in-bounds).
+    inv_sigma: (ny_pad, nx_pad) normalization grid, tile-aligned.
+    Returns (ny_pad, nx_pad) float32 stage sums.
+    """
+    ny, nx = inv_sigma.shape
+    ty, tx = tile
+    assert ny % ty == 0 and nx % tx == 0, (ny, nx, tile)
+    assert ii_padded.shape[0] >= ny + WINDOW
+    assert ii_padded.shape[1] >= nx + WINDOW
+    n_weak = int(rect_xywh.shape[0])
+
+    kernel = functools.partial(_stage_kernel, tile=tile, n_weak=n_weak)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(ny // ty, nx // tx),
+        in_specs=[
+            # full SAT resident in VMEM (index map constant → loaded once)
+            pl.BlockSpec(ii_padded.shape, lambda i, j, *_: (0, 0)),
+            pl.BlockSpec((ty, tx), lambda i, j, *_: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((ty, tx), lambda i, j, *_: (i, j)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ny, nx), jnp.float32),
+        interpret=interpret,
+    )(rect_xywh.astype(jnp.int32), rect_w.astype(jnp.float32),
+      wc_threshold.astype(jnp.float32), left_val.astype(jnp.float32),
+      right_val.astype(jnp.float32), ii_padded.astype(jnp.float32),
+      inv_sigma.astype(jnp.float32))

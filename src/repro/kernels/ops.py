@@ -1,0 +1,113 @@
+"""Public jit'd wrappers over the Pallas kernels (with jnp-ref fallback).
+
+All wrappers handle tile padding/unpadding so callers see natural shapes.
+``interpret=True`` (default) executes the kernel bodies in Python on CPU —
+this container has no TPU; the kernels are *written* for TPU (BlockSpec
+VMEM tiling, SMEM scalar prefetch) and validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.cascade import Cascade, WINDOW
+from . import ref
+from .integral_image import integral_image_kernel, DEFAULT_TILE
+from .haar_stage import haar_stage_sums_kernel
+from .window_variance import window_inv_sigma_kernel
+
+__all__ = ["integral_image", "window_inv_sigma_grid", "dense_stage_sums"]
+
+
+def _pad_to(x: jax.Array, mh: int, mw: int, mode: str = "edge") -> jax.Array:
+    h, w = x.shape[-2:]
+    ph = (-h) % mh
+    pw = (-w) % mw
+    if ph == 0 and pw == 0:
+        return x
+    cfg = [(0, 0)] * (x.ndim - 2) + [(0, ph), (0, pw)]
+    return jnp.pad(x, cfg, mode=mode)
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret", "use_kernel"))
+def integral_image(img: jax.Array, *, tile=DEFAULT_TILE,
+                   interpret: bool = True, use_kernel: bool = True
+                   ) -> jax.Array:
+    """Padded SAT (H+1, W+1) of ``img`` — kernel-accelerated version of
+    :func:`repro.core.integral.integral_image`."""
+    h, w = img.shape
+    if not use_kernel:
+        ii = ref.integral_image_ref(img)
+    else:
+        padded = _pad_to(img.astype(jnp.float32), tile[0], tile[1],
+                         mode="constant")
+        ii = integral_image_kernel(padded, tile=tile,
+                                   interpret=interpret)[:h, :w]
+    return jnp.pad(ii, ((1, 0), (1, 0)))
+
+
+@partial(jax.jit, static_argnames=("ny", "nx", "tile", "interpret",
+                                   "use_kernel"))
+def window_inv_sigma_grid(ii_pair: jax.Array, ny: int, nx: int, *,
+                          tile=DEFAULT_TILE, interpret: bool = True,
+                          use_kernel: bool = True) -> jax.Array:
+    """(ny, nx) 1/sigma grid from the stacked (ii2, iic) padded SAT pair."""
+    ii2, iic = ii_pair[0], ii_pair[1]
+    if not use_kernel:
+        return ref.window_inv_sigma_ref(ii2, iic, ny, nx)
+    ty, tx = tile
+    ny_pad = ny + ((-ny) % ty)
+    nx_pad = nx + ((-nx) % tx)
+    need_h = ny_pad + WINDOW + 1
+    need_w = nx_pad + WINDOW + 1
+    ii2p = _pad_to(ii2, 1, 1)  # no-op; keep dtype
+    pad_h = max(0, need_h - ii2.shape[0])
+    pad_w = max(0, need_w - ii2.shape[1])
+    ii2p = jnp.pad(ii2, ((0, pad_h), (0, pad_w)), mode="edge")
+    iicp = jnp.pad(iic, ((0, pad_h), (0, pad_w)), mode="edge")
+    out = window_inv_sigma_kernel(ii2p, iicp, ny_pad, nx_pad, tile=tile,
+                                  interpret=interpret)
+    return out[:ny, :nx]
+
+
+def dense_stage_sums(cascade: Cascade, cascade_static: Cascade, s: int,
+                     ii: jax.Array, inv_sigma_grid: jax.Array, *,
+                     tile=DEFAULT_TILE, interpret: bool = True) -> jax.Array:
+    """Stage-``s`` vote sums over the dense stride-1 window grid.
+
+    ``cascade`` carries (possibly traced) parameter arrays; the *static*
+    twin provides the stage boundaries needed to slice them at trace time.
+    """
+    k0 = int(np.asarray(cascade_static.stage_offsets)[s])
+    k1 = int(np.asarray(cascade_static.stage_offsets)[s + 1])
+    ny, nx = inv_sigma_grid.shape
+    ty, tx = tile
+    ny_pad = ny + ((-ny) % ty)
+    nx_pad = nx + ((-nx) % tx)
+    pad_h = max(0, ny_pad + WINDOW + 1 - ii.shape[0])
+    pad_w = max(0, nx_pad + WINDOW + 1 - ii.shape[1])
+    iip = jnp.pad(ii, ((0, pad_h), (0, pad_w)), mode="edge")
+    invp = jnp.pad(inv_sigma_grid,
+                   ((0, ny_pad - ny), (0, nx_pad - nx)), mode="edge")
+    out = haar_stage_sums_kernel(
+        cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
+        cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
+        cascade.right_val[k0:k1], iip, invp, tile=tile,
+        interpret=interpret)
+    return out[:ny, :nx]
+
+
+def dense_stage_sums_ref(cascade: Cascade, cascade_static: Cascade, s: int,
+                         ii: jax.Array, inv_sigma_grid: jax.Array
+                         ) -> jax.Array:
+    """Oracle twin of :func:`dense_stage_sums` (same signature contract)."""
+    k0 = int(np.asarray(cascade_static.stage_offsets)[s])
+    k1 = int(np.asarray(cascade_static.stage_offsets)[s + 1])
+    return ref.dense_stage_sums_ref(
+        cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
+        cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
+        cascade.right_val[k0:k1], ii, inv_sigma_grid)

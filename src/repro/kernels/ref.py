@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``<name>_ref`` matches the corresponding kernel's public wrapper in
+``ops.py`` bit-for-bit in semantics (tests sweep shapes/dtypes and
+``assert_allclose`` kernel vs oracle).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cascade import Cascade, WINDOW
+from repro.core.integral import rect_sum
+
+_AREA = float(WINDOW * WINDOW)
+
+
+def integral_image_ref(img: jax.Array) -> jax.Array:
+    """Inclusive 2-D cumulative sum (unpadded), float32 — kernel contract."""
+    img = img.astype(jnp.float32)
+    return jnp.cumsum(jnp.cumsum(img, axis=0), axis=1)
+
+
+def window_inv_sigma_ref(ii2: jax.Array, iic: jax.Array, ny: int, nx: int,
+                         window: int = WINDOW) -> jax.Array:
+    """(ny, nx) grid of 1/sigma per window origin (stride 1).
+
+    ii2/iic are *padded* SATs of the centred-squared / centred image
+    (see repro.core.integral.integral_images).
+    """
+    n = float(window * window)
+    ys = jnp.arange(ny)[:, None]
+    xs = jnp.arange(nx)[None, :]
+    s2 = rect_sum(ii2, ys, xs, window, window)
+    s1 = rect_sum(iic, ys, xs, window, window)
+    var = s2 / n - (s1 / n) ** 2
+    return 1.0 / jnp.sqrt(jnp.maximum(var, 1.0))
+
+
+def dense_stage_sums_ref(rect_xywh: jax.Array, rect_w: jax.Array,
+                         wc_threshold: jax.Array, left_val: jax.Array,
+                         right_val: jax.Array, ii: jax.Array,
+                         inv_sigma: jax.Array) -> jax.Array:
+    """Stage sums over a dense stride-1 window grid.
+
+    rect_xywh (K,3,4), rect_w (K,3), thresholds/votes (K,): the stage's
+    weak classifiers.  ii is the padded SAT; inv_sigma is the (ny, nx)
+    normalization grid.  Returns (ny, nx) float32 stage sums.
+    """
+    ny, nx = inv_sigma.shape
+    ys = jnp.arange(ny)[:, None]
+    xs = jnp.arange(nx)[None, :]
+
+    def body(k, acc):
+        rects = jax.lax.dynamic_index_in_dim(rect_xywh, k, 0, False)
+        w = jax.lax.dynamic_index_in_dim(rect_w, k, 0, False)
+        feat = jnp.zeros((ny, nx), jnp.float32)
+        for r in range(rects.shape[0]):
+            rx, ry = rects[r, 0], rects[r, 1]
+            rw_, rh = rects[r, 2], rects[r, 3]
+            feat = feat + w[r] * rect_sum(ii, ys + ry, xs + rx, rh, rw_)
+        f_norm = feat * inv_sigma / _AREA
+        vote = jnp.where(f_norm < wc_threshold[k], left_val[k], right_val[k])
+        return acc + vote
+
+    init = jnp.zeros((ny, nx), jnp.float32)
+    return jax.lax.fori_loop(0, rect_xywh.shape[0], body, init)

@@ -1,0 +1,3 @@
+# Launch layer: production meshes, dry-run cell builders, roofline
+# analysis, train/serve drivers.  NOTE: dryrun.py mutates XLA_FLAGS at
+# import (host-device count) — import it only as a script entry point.

@@ -1,0 +1,183 @@
+"""Dry-run cell builders: (architecture × input shape × mesh) →
+(jittable step fn, ShapeDtypeStruct inputs with shardings).
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable ShapeDtypeStructs, zero device allocation — the full published
+configs are exercised **only** through these (lower + compile).
+
+Per shape kind:
+- train_*   → ``train_step(state, batch)`` (fwd + bwd + AdamW update)
+- prefill_* → ``prefill_step(params, tokens, cache)``
+- decode_* / long_* → ``decode_step(params, token, cache)`` — one new
+  token against a seq_len-deep cache (the spec's ``serve_step``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, SHAPES, ShapeSpec
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (make_rules, param_pspecs,
+                                        cache_pspecs, batch_pspecs, P)
+from repro.models import build_model
+from repro.train import make_train_step, init_train_state
+from repro.serve import make_prefill_step, make_decode_step
+
+__all__ = ["cell_applicable", "build_cell", "input_specs", "CELL_SKIPS"]
+
+# long_500k runs only on sub-quadratic archs (full-attention KV at 500k
+# is exactly what the shape excludes) — DESIGN.md §4.
+CELL_SKIPS = {
+    ("deepseek-v2-236b", "long_500k"): "full-attention (MLA) 500k cache",
+    ("qwen3-moe-235b-a22b", "long_500k"): "full-attention 500k cache",
+    ("stablelm-1.6b", "long_500k"): "full-attention 500k cache",
+    ("olmo-1b", "long_500k"): "full-attention 500k cache",
+    ("qwen2-72b", "long_500k"): "full-attention 500k cache",
+    ("llama3-405b", "long_500k"): "full-attention 500k cache",
+    ("internvl2-1b", "long_500k"): "full-attention 500k cache",
+    ("musicgen-medium", "long_500k"): "full-attention 500k cache",
+}
+
+
+def cell_applicable(arch: str, shape: str) -> bool:
+    return (arch, shape) not in CELL_SKIPS
+
+
+def _sds(tree, pspecs, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dropping spec
+    axes that don't divide the dim — see enforce_divisibility)."""
+    from repro.distributed.sharding import enforce_divisibility
+
+    def one(s, spec):
+        spec = enforce_divisibility(spec, s.shape, mesh)
+        sh = jax.sharding.NamedSharding(mesh, spec)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree.map(one, tree, pspecs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _moment_dtype(cfg: ModelConfig):
+    # 405B-class: bf16 Adam moments to fit the HBM budget (DESIGN.md §5)
+    return jnp.bfloat16 if cfg.n_params() > 3e11 else jnp.float32
+
+
+def _accum_dtype(cfg: ModelConfig):
+    # grad-accumulation buffer is param-sized: bf16 for 405B-class
+    return jnp.bfloat16 if cfg.n_params() > 3e11 else jnp.float32
+
+
+def default_microbatch(cfg: ModelConfig, spec: ShapeSpec, chips: int,
+                       tp: int = 16, budget_bytes: float = 2 * 2 ** 30
+                       ) -> int:
+    """Largest divisor of the global batch whose per-device scan-carry
+    (seq × d_model × n_layers × 2 B, SP-sharded by tp) fits the budget.
+    0 = no accumulation needed."""
+    if spec.kind != "train":
+        return 0
+    dp = max(chips // tp, 1)
+    per_tok = cfg.d_model * 2 * max(len(cfg.block_pattern), 1)
+    fit = int(budget_bytes * dp * tp // (spec.seq_len * per_tok))
+    if fit >= spec.global_batch:
+        return 0
+    mb = max(dp, 1)
+    for d in range(spec.global_batch, 0, -1):
+        if spec.global_batch % d == 0 and d <= fit and d % dp == 0:
+            mb = d
+            break
+    return mb
+
+
+def input_specs(arch: str, shape: str, mesh, *, cfg: ModelConfig = None,
+                fsdp: bool = True) -> dict:
+    """ShapeDtypeStruct stand-ins (with shardings) for every step input."""
+    cfg = cfg or get_config(arch)
+    spec: ShapeSpec = SHAPES[shape]
+    rules = make_rules(mesh, fsdp=fsdp)
+    model = build_model(cfg, rules)
+    dpb = P(rules.dp if len(rules.dp) > 1 else rules.dp[0])
+
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    p_specs = param_pspecs(params_shape, rules)
+
+    B, S = spec.global_batch, spec.seq_len
+    if spec.kind == "train":
+        state_shape = jax.eval_shape(
+            partial(init_train_state, model,
+                    moment_dtype=_moment_dtype(cfg)), jax.random.key(0))
+        state_specs = type(state_shape)(
+            p_specs,
+            type(state_shape.opt)(P(), p_specs, p_specs),
+            P())
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+        if cfg.input_mode == "tokens+prefix":
+            batch["tokens"] = jax.ShapeDtypeStruct(
+                (B, S - cfg.n_prefix_embeds + 1), jnp.int32)
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16)
+        b_specs = batch_pspecs(batch, rules)
+        return {"state": _sds(state_shape, state_specs, mesh),
+                "batch": _sds(batch, b_specs, mesh)}
+
+    c_shape = jax.eval_shape(partial(model.init_cache, B, S))
+    c_specs = cache_pspecs(c_shape, cfg, rules)
+    params_sds = _sds(params_shape, p_specs, mesh)
+    cache_sds = _sds(c_shape, c_specs, mesh)
+    if spec.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        out = {"params": params_sds, "cache": cache_sds}
+        dp0 = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+        if cfg.input_mode == "tokens+prefix":
+            out["tokens"] = _sds(
+                jax.ShapeDtypeStruct((B, S - cfg.n_prefix_embeds),
+                                     jnp.int32), dpb, mesh)
+            out["prefix_embeds"] = _sds(
+                jax.ShapeDtypeStruct((B, cfg.n_prefix_embeds, cfg.d_model),
+                                     jnp.bfloat16), P(dp0, None, None),
+                mesh)
+        else:
+            out["tokens"] = _sds(tokens, dpb, mesh)
+        return out
+    # decode
+    return {"params": params_sds,
+            "token": _sds(jax.ShapeDtypeStruct((B,), jnp.int32), dpb, mesh),
+            "cache": cache_sds}
+
+
+def build_cell(arch: str, shape: str, mesh, *, cfg: ModelConfig = None,
+               fsdp: bool = True, microbatch: int = 0):
+    """Returns (step_fn, specs_dict).  ``jax.jit(step_fn).lower(**specs)``
+    is the dry-run contract."""
+    cfg = cfg or get_config(arch)
+    rules = make_rules(mesh, fsdp=fsdp)
+    model = build_model(cfg, rules)
+    spec = SHAPES[shape]
+    specs = input_specs(arch, shape, mesh, cfg=cfg, fsdp=fsdp)
+    if spec.kind == "train":
+        if microbatch == 0:
+            microbatch = default_microbatch(cfg, spec,
+                                            int(mesh.devices.size))
+        fn = make_train_step(model, microbatch=microbatch,
+                             accum_dtype=_accum_dtype(cfg))
+
+        def train_fn(state, batch):
+            return fn(state, batch)
+        return train_fn, specs
+    if spec.kind == "prefill":
+        pf = make_prefill_step(model)
+        if cfg.input_mode == "tokens+prefix":
+            def prefill_fn(params, tokens, cache, prefix_embeds):
+                return pf(params, tokens, cache, prefix_embeds)
+        else:
+            def prefill_fn(params, tokens, cache):
+                return pf(params, tokens, cache)
+        return prefill_fn, specs
+    dc = make_decode_step(model)
+
+    def decode_fn(params, token, cache):
+        return dc(params, token, cache)
+    return decode_fn, specs

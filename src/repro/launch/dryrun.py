@@ -1,0 +1,142 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first
+# backend init.  This module is a script entry point only — never import
+# it from library/test code (smoke tests and benches see 1 device).
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh): build the step function
+and ShapeDtypeStruct inputs (launch/cells.py), ``jit(...).lower(...)
+.compile()`` under the production mesh, and record memory_analysis +
+cost_analysis + the collective footprint (launch/roofline.py parses the
+HLO).  A cell failing here is a bug in the distribution config.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import list_archs, SHAPES
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.cells import build_cell, cell_applicable
+from repro.launch.roofline import (roofline_from_compiled,
+                                   collective_bytes_from_text)
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             fsdp: bool = True, verbose: bool = True,
+             keep_text: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, specs = build_cell(arch, shape, mesh, fsdp=fsdp)
+    # donate the mutated aggregate (train state / serving cache) — the
+    # standard production aliasing that halves resident state memory
+    donate = ("state",) if SHAPES[shape].kind == "train" else ("cache",)
+    with mesh:
+        lowered = jax.jit(fn, donate_argnames=donate).lower(**specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    coll = collective_bytes_from_text(text)
+    roof = roofline_from_compiled(arch, shape, compiled, mesh,
+                                  collective=coll)
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "chips": mesh_chips(mesh),
+        "ok": True,
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "memory": _mem_dict(mem),
+        "flops": cost.get("flops", float("nan")) if cost else None,
+        "bytes_accessed": (cost.get("bytes accessed", float("nan"))
+                           if cost else None),
+        "collective_bytes": coll["total_bytes"],
+        "collective_ops": coll["per_kind"],
+        "roofline": roof,
+    }
+    if keep_text:
+        result["hlo_text"] = text
+    if verbose:
+        mb = result["memory"]
+        print(f"[{result['mesh']}] {arch} × {shape}: "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s  "
+              f"mem/device {mb.get('bytes_per_device', 0)/2**30:.2f} GiB  "
+              f"coll {coll['total_bytes']/2**30:.2f} GiB", flush=True)
+    return result
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "peak_memory_in_bytes"):
+        try:
+            out[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    # args live in HBM alongside temps: the fit criterion per device
+    out["bytes_per_device"] = (out.get("argument_size_in_bytes", 0)
+                               + out.get("temp_size_in_bytes", 0))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                if cell_applicable(arch, shape):
+                    cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    for mp in meshes:
+        for arch, shape in cells:
+            try:
+                results.append(run_cell(arch, shape, multi_pod=mp,
+                                        fsdp=not args.no_fsdp))
+            except Exception as e:                      # noqa: BLE001
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "pod2x16x16" if mp else "16x16",
+                                "ok": False, "error": f"{type(e).__name__}:"
+                                f" {e}"})
+                print(f"FAILED {arch} × {shape}", flush=True)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells passed")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,289 @@
+"""Roofline analysis from the compiled dry-run artifact (deliverable g).
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+
+    compute    = FLOPs / (chips · 197e12)            [bf16 peak]
+    memory     = HBM bytes / (chips · 819e9)
+    collective = collective bytes per chip / 50e9    [ICI link]
+
+Sources & caveats (measured on this jax/XLA build):
+- ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified:
+  a 10-iter scan reports 1 matmul of FLOPs), and every layer here lives
+  under ``lax.scan`` — so XLA's numbers are reported as cross-checks
+  while the primary FLOPs/bytes come from an exact analytic model of the
+  config (``analytic_cost``).
+- collective bytes are parsed from ``compiled.as_text()`` (post-SPMD,
+  shapes are per-device): Σ over all-gather / all-reduce / reduce-scatter
+  / all-to-all / collective-permute of (ring-factor × tensor bytes);
+  ops inside while bodies are multiplied by the loop trip count — taken
+  from the cond-region constant when XLA exposes it, else from the known
+  scan length of the cell (layer-scan trips).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs import get_config, SHAPES
+from repro.configs.base import ModelConfig, ShapeSpec
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "collective_bytes_from_text",
+           "analytic_cost", "roofline_from_compiled", "model_flops"]
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|s64|s32|u32|s16|u16|s8|u8|pred|"
+                       r"c64|c128)\[([\d,]*)\]")
+
+# ring-algorithm byte factors per element of the named tensor
+_COLL_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(s: str) -> int:
+    """Sum bytes over every typed shape literal in an HLO op string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(text: str) -> dict:
+    """computation name → list of op lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            name = line.split()[0].lstrip("%")
+            if name == "ENTRY":
+                name = line.split()[1].lstrip("%")
+            comps[name] = []
+            cur = name
+        elif line.strip() == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def _while_info(comps: dict) -> list[dict]:
+    """All while ops: (enclosing comp, body comp, cond comp, trips|None)."""
+    out = []
+    wre = re.compile(r"while\((.*?)\).*?condition=%?([\w\.\-]+),"
+                     r"\s*body=%?([\w\.\-]+)")
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = wre.search(ln)
+            if m:
+                cond = m.group(2)
+                trips = None
+                for cl in comps.get(cond, []):
+                    cm = re.search(r"constant\((\d+)\)", cl)
+                    if cm:
+                        trips = max(trips or 0, int(cm.group(1)))
+                out.append({"in": cname, "body": m.group(3),
+                            "cond": cond, "trips": trips})
+    return out
+
+
+def collective_bytes_from_text(text: str,
+                               default_trips: int | None = None) -> dict:
+    """Per-device collective bytes (ring-factor weighted), loop-aware."""
+    comps = _split_computations(text)
+    whiles = _while_info(comps)
+    # computation multiplier: product of trips of enclosing whiles
+    mult = {name: 1.0 for name in comps}
+    for _ in range(4):                       # fixpoint over nesting ≤ 4
+        for w in whiles:
+            trips = w["trips"] if w["trips"] else (default_trips or 1)
+            mult[w["body"]] = mult.get(w["in"], 1.0) * trips
+            mult[w["cond"]] = mult.get(w["in"], 1.0) * trips
+
+    per_kind: dict[str, float] = {}
+    total = 0.0
+    total_norm = 0.0
+    n_ops = 0
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1.0)
+        for ln in lines:
+            cm = _COLL_RE.search(ln)
+            if cm and "-done" not in ln.split("=")[-1][:40]:
+                kind = cm.group(1)
+                rhs = ln.split("=", 1)[1]
+                b = _shape_bytes(rhs.split("(")[0]) * _COLL_FACTOR[kind] * m
+                per_kind[kind] = per_kind.get(kind, 0.0) + b
+                total += b
+                # bf16 normalization: the CPU backend rewrites bf16 dots to
+                # f32 (no bf16 DotThunk), so GSPMD places some collectives
+                # on convert-widened f32 operands a TPU build would move in
+                # bf16.  Ops consuming an inserted convert are re-priced at
+                # 2 bytes/element.  (DESIGN.md §7 caveat 1.)
+                widened = ("f32[" in rhs.split("(")[0]
+                           and "convert" in rhs.split("(", 1)[1][:64])
+                total_norm += b / 2 if widened else b
+                n_ops += 1
+    return {"total_bytes": total, "total_bytes_norm": total_norm,
+            "per_kind": per_kind, "n_ops": n_ops, "n_while": len(whiles)}
+
+
+# ------------------------------------------------------------- analytic cost
+def model_flops(cfg: ModelConfig, tokens: int) -> float:
+    """6·N·D-style training FLOPs (MoE: active params only), no attention."""
+    return 6.0 * cfg.n_active_params() * tokens
+
+
+def _attn_flops_per_layer(cfg, B, S, causal=True, decode=False,
+                          window=None):
+    """Score+PV matmul FLOPs for one attention layer (fwd)."""
+    if cfg.mla is not None:
+        dh = cfg.mla.nope_dim + cfg.mla.rope_dim
+        dv = cfg.mla.v_dim
+    else:
+        dh = dv = cfg.head_dim_
+    H = cfg.n_heads
+    if decode:
+        kv = min(S, window) if window else S
+        return 2.0 * B * H * kv * (dh + dv)
+    kv = min(S, window) if window else S
+    eff = kv / 2 if (causal and not window) else kv
+    return 2.0 * B * H * S * eff * (dh + dv)
+
+
+def _ssd_flops_per_layer(cfg, B, S, decode=False):
+    s = cfg.ssd
+    din = s.expand * cfg.d_model
+    H = din // s.head_dim
+    N, Pd = s.d_state, s.head_dim
+    if decode:
+        return 2.0 * B * H * N * Pd * 2
+    L = s.chunk
+    intra = 2.0 * B * S * L * H * (N + Pd)     # CBᵀ + att·x per chunk row
+    inter = 2.0 * B * S * H * N * Pd * 2       # state build + apply
+    return intra + inter
+
+
+def analytic_cost(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    """Exact FLOPs + HBM bytes for the cell's step (per step, whole fleet).
+
+    train: fwd+bwd (3×fwd matmul FLOPs) + remat refwd (+1×) + optimizer;
+    prefill: fwd over B·S tokens; decode: fwd over B tokens + cache scan.
+    """
+    B, S = spec.global_batch, spec.seq_len
+    N_act = cfg.n_active_params()
+    N_tot = cfg.n_params()
+    pat = cfg.block_pattern
+    window = cfg.rglru.window if cfg.rglru is not None else None
+
+    def fwd_flops(tokens, decode=False):
+        f = 2.0 * N_act * tokens
+        Bx = B
+        Sx = 1 if decode else tokens // B
+        for kind in pat:
+            if kind == "attn":
+                f += _attn_flops_per_layer(cfg, Bx, S if decode else Sx,
+                                           decode=decode, window=window)
+            elif kind == "ssd":
+                f += _ssd_flops_per_layer(cfg, Bx, Sx, decode=decode)
+            elif kind == "rglru":
+                f += 10.0 * Bx * Sx * cfg.rglru.width   # elementwise scan
+        return f
+
+    pb = 2 if cfg.param_dtype == "bfloat16" else 4
+    N_res = N_tot          # resident weights read once per step (MoE: all
+    #                        experts compute their capacity slice)
+    if spec.kind == "train":
+        T = B * S
+        flops = 4.0 * fwd_flops(T)        # fwd + bwd(2×) + remat refwd(1×)
+        mdtype = 2 if N_tot > 3e11 else 4
+        bytes_params = N_tot * (pb * 3            # fwd read, bwd read, write
+                                + pb              # grad
+                                + 2 * mdtype * 2)  # m, v read+write
+        bytes_act = 2.0 * T * cfg.d_model * len(pat) * 2 * 2  # remat blocks
+        bytes_ = bytes_params + bytes_act
+    elif spec.kind == "prefill":
+        T = B * S
+        flops = fwd_flops(T)
+        bytes_ = N_res * pb + 2.0 * T * cfg.d_model * len(pat) * 2 \
+            + T * _cache_bytes_per_token(cfg)
+    else:                                  # decode: one token per sequence
+        flops = fwd_flops(B, decode=True)
+        bytes_ = N_res * pb + B * S * _cache_bytes_per_token(cfg) \
+            + B * _cache_bytes_per_token(cfg)
+    return {"flops": flops, "hbm_bytes": bytes_}
+
+
+def _cache_bytes_per_token(cfg: ModelConfig) -> float:
+    """Decode-state bytes read per token of context, summed over layers."""
+    total = 0.0
+    for kind in cfg.block_pattern:
+        if kind == "attn":
+            if cfg.mla is not None:
+                total += (cfg.mla.kv_lora + cfg.mla.rope_dim) * 2
+            else:
+                w = cfg.rglru.window if cfg.rglru is not None else None
+                # windowed layers hold ≤ window entries; amortize as full
+                total += 2 * cfg.n_kv_heads * cfg.head_dim_ * 2 \
+                    * (1.0 if w is None else 0.0)
+        # rglru/ssd state is O(1) per sequence — negligible per token
+    return total
+
+
+# ----------------------------------------------------------------- assemble
+def roofline_from_compiled(arch: str, shape: str, compiled, mesh,
+                           collective: dict | None = None,
+                           cfg: ModelConfig | None = None) -> dict:
+    cfg = cfg or get_config(arch)
+    spec = SHAPES[shape]
+    chips = int(mesh.devices.size)
+    cost = compiled.cost_analysis() or {}
+    if collective is None:
+        collective = collective_bytes_from_text(compiled.as_text())
+
+    ana = analytic_cost(cfg, spec)
+    t_compute = ana["flops"] / (chips * PEAK_FLOPS)
+    t_memory = ana["hbm_bytes"] / (chips * HBM_BW)
+    t_coll = collective.get("total_bytes_norm",
+                            collective["total_bytes"]) / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cfg, spec.tokens if spec.kind == "train"
+                     else (spec.tokens if spec.kind == "prefill"
+                           else spec.global_batch))
+    if spec.kind != "train":
+        mf = mf / 3.0                                # fwd only: 2·N·D
+    useful = mf / max(ana["flops"], 1.0)
+    frac = t_compute / max(bound, 1e-30)             # roofline fraction
+    return {
+        **{k: float(v) for k, v in terms.items()},
+        "dominant": dominant,
+        "step_time_bound_s": float(bound),
+        "roofline_fraction": float(frac),
+        "analytic_flops": float(ana["flops"]),
+        "analytic_hbm_bytes": float(ana["hbm_bytes"]),
+        "model_flops_6ND": float(mf),
+        "useful_flops_ratio": float(useful),
+        "xla_flops_per_device": float(cost.get("flops", 0.0)),
+        "xla_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": float(collective["total_bytes"]),
+        "collective_bytes_bf16_norm": float(
+            collective.get("total_bytes_norm", collective["total_bytes"])),
+    }

@@ -1,0 +1,112 @@
+"""Training driver: config → mesh → jitted train_step → checkpointed loop.
+
+Production behaviors wired in: atomic checkpoint/restart (survives
+SIGKILL mid-write), deterministic resumable data, straggler detection
+hooks, optional int8 gradient compression, restart-bounded driver.
+
+CPU-scale usage (the end-to-end example trains a ~100M model):
+
+    python -m repro.launch.train --arch olmo-1b --smoke --steps 200 \
+        --batch 8 --seq 256 --ckpt /tmp/run1
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import SyntheticTokens
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.distributed.sharding import make_rules
+from repro.distributed.compression import make_compressor
+from repro.distributed.fault import StragglerDetector, run_with_restarts
+from repro.models import build_model
+from repro.train import init_train_state, make_train_step
+
+
+def train_loop(*, cfg, steps: int, batch: int, seq: int, ckpt: str | None,
+               lr: float = 3e-4, microbatch: int = 0, mesh=None,
+               compress: bool = False, ckpt_every: int = 50,
+               log_every: int = 10, seed: int = 0,
+               fail_at: int | None = None) -> dict:
+    """Returns final metrics.  ``fail_at``: inject a failure at that step
+    (fault-tolerance tests)."""
+    rules = make_rules(mesh) if mesh is not None else None
+    model = build_model(cfg, rules)
+    pipe = SyntheticTokens(cfg.vocab_size, batch, seq, seed=seed)
+
+    compressor = None
+    if compress:
+        compressor, _ = make_compressor()
+    step_fn = jax.jit(make_train_step(
+        model, peak_lr=lr, warmup=max(steps // 20, 5), total_steps=steps,
+        microbatch=microbatch, compress_grads=compressor))
+
+    state = init_train_state(model, jax.random.key(seed))
+    start = 0
+    if ckpt and latest_step(ckpt) is not None:
+        state, start, meta = restore_checkpoint(ckpt, state)
+        print(f"restored step {start} from {ckpt}")
+
+    det = StragglerDetector(n_pods=1)
+    metrics = {}
+    t_last = time.time()
+    for step in range(start, steps):
+        if fail_at is not None and step == fail_at:
+            raise RuntimeError(f"injected failure at step {step}")
+        batch_np = pipe(step)
+        state, metrics = step_fn(state, jax.tree.map(jnp.asarray, batch_np))
+        if ckpt and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt, step + 1, state,
+                            metadata={"loss": float(metrics["loss"])})
+        if (step + 1) % log_every == 0:
+            dt = time.time() - t_last
+            t_last = time.time()
+            det.update([dt / log_every])
+            print(f"step {step + 1}/{steps} loss={float(metrics['loss']):.4f}"
+                  f" acc={float(metrics['accuracy']):.3f}"
+                  f" gnorm={float(metrics['grad_norm']):.2f}"
+                  f" {dt / log_every * 1e3:.0f} ms/step", flush=True)
+    if ckpt:
+        save_checkpoint(ckpt, steps, state,
+                        metadata={"loss": float(metrics.get("loss", 0.0))})
+    return {k: float(v) for k, v in metrics.items()}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--max-restarts", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+
+    def loop(attempt):
+        if attempt:
+            print(f"restart #{attempt}")
+        return train_loop(cfg=cfg, steps=args.steps, batch=args.batch,
+                          seq=args.seq, ckpt=args.ckpt, lr=args.lr,
+                          microbatch=args.microbatch,
+                          compress=args.compress)
+
+    out = run_with_restarts(loop, max_restarts=args.max_restarts)
+    print("final:", {k: round(v, 4) for k, v in out.items()
+                     if k in ("loss", "accuracy", "nll")})
+
+
+if __name__ == "__main__":
+    main()

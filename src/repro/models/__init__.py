@@ -1,0 +1,10 @@
+# LM substrate for the assigned architectures:
+#   layers      — norms, RoPE, flash attention (custom-vjp, chunked), MLPs
+#   mla         — DeepSeek-V2 multi-head latent attention (+ absorbed decode)
+#   moe         — top-k routed experts (shard_map EP, capacity dispatch)
+#   rglru       — RG-LRU recurrent block (associative scan / O(1) decode)
+#   ssd         — Mamba-2 state-space duality (chunked matmul form)
+#   caches      — KV / sliding-window / recurrent decode state
+#   transformer — composable decoder over the per-layer block pattern
+#   early_exit  — cascade early-exit decoding (the paper's technique on LMs)
+from .transformer import Model, build_model, param_count  # noqa: F401

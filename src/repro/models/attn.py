@@ -1,0 +1,119 @@
+"""GQA attention block (dense / local-window) with KV-cache decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (init_dense, dense, apply_rope, flash_attention,
+                     decode_attention)
+
+__all__ = ["init_attn", "attn_block"]
+
+
+def init_attn(key, cfg, dtype) -> dict:
+    D, Hq, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    Dh = cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, D, Hq * Dh, dtype, bias=cfg.qkv_bias),
+        "wk": init_dense(kk, D, Hkv * Dh, dtype, bias=cfg.qkv_bias),
+        "wv": init_dense(kv, D, Hkv * Dh, dtype, bias=cfg.qkv_bias),
+        "wo": init_dense(ko, Hq * Dh, D, dtype,
+                         scale=(Hq * Dh) ** -0.5),
+    }
+
+
+def attn_block(p: dict, x: jax.Array, cfg, *, window: int | None = None,
+               cache: dict | None = None, cache_len=None,
+               positions: jax.Array | None = None, rules=None):
+    """x: (B, S, D).  Returns (out, new_cache).
+
+    - train:    cache None                      → flash attention
+    - prefill:  cache dict (zeroed)             → flash + cache write
+    - decode:   cache dict, S == 1, cache_len   → cached attention
+      (the new K/V is written at slot ``cache_len % Smax`` — a ring buffer
+      for windowed layers, linear buffer otherwise)
+    """
+    B, S, D = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    decode = cache is not None and S == 1 and cache_len is not None
+
+    if positions is None:
+        base = cache_len if decode else 0
+        positions = jnp.arange(S)[None, :] + (jnp.asarray(base).reshape(-1, 1)
+                                              if decode else 0)
+    q = dense(p["wq"], x).reshape(B, S, Hq, Dh)
+    k = dense(p["wk"], x).reshape(B, S, Hkv, Dh)
+    v = dense(p["wv"], x).reshape(B, S, Hkv, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_frac)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_frac)
+    if rules is not None and not decode:
+        # §Perf C1: pin flash operand layouts — q sharded on heads (TP),
+        # k/v replicated over the tp axis (GQA kv_heads rarely divide it;
+        # without this GSPMD reshards kv per (q-chunk × kv-chunk) loop
+        # iteration — measured 320 GiB/device of in-loop all-gathers on
+        # qwen2-72b prefill_32k)
+        tp_size = rules.mesh.shape.get(rules.tp, 1) or 1
+        hq_ok = Hq % tp_size == 0
+        # kv: shard heads when there are at least tp_size of them (MHA /
+        # large-GQA; padding ≤ 2× beats 16× replication), replicate the
+        # small-GQA case (Hkv ≪ tp — sharding would leave most shards
+        # empty and forces in-loop reshards)
+        kv_ax = "tp" if Hkv >= tp_size else None
+        q = rules.act(q, "dp", None, "tp" if hq_ok else None, None)
+        k = rules.act(k, "dp", None, kv_ax, None)
+        v = rules.act(v, "dp", None, kv_ax, None)
+
+    if decode:
+        Smax = cache["k"].shape[1]
+        slot = jnp.asarray(cache_len) % Smax
+        kc = _write_slot(cache["k"], k, slot)
+        vc = _write_slot(cache["v"], v, slot)
+        # ring buffers hold only in-window entries: every written slot valid
+        n_valid = jnp.minimum(jnp.asarray(cache_len) + 1, Smax)
+        o = decode_attention(q, kc, vc, n_valid)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        o = flash_attention(q, k, v, True, window,
+                            cfg.attn_chunk_q, cfg.attn_chunk_kv)
+        if rules is not None:
+            # §Perf A1b: pin the attention output layout so the wo
+            # contraction (and its backward) stays TP instead of
+            # all-gathering the [D, D] projection weights per layer
+            hq_ok = Hq % (rules.mesh.shape.get(rules.tp, 1) or 1) == 0
+            o = rules.act(o, "dp", None, "tp" if hq_ok else None, None)
+        new_cache = None
+        if cache is not None:    # prefill: persist the (window-)cache
+            Smax = cache["k"].shape[1]
+            if S >= Smax:        # keep last Smax positions (ring-aligned)
+                start = S - Smax
+                ks = jax.lax.dynamic_slice_in_dim(k, start, Smax, 1)
+                vs = jax.lax.dynamic_slice_in_dim(v, start, Smax, 1)
+                # place so slot (pos % Smax) matches decode's ring indexing
+                shift = (start % Smax)
+                ks = jnp.roll(ks, shift, axis=1)
+                vs = jnp.roll(vs, shift, axis=1)
+                new_cache = {"k": ks, "v": vs}
+            else:
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(
+                        cache["k"], k, 0, 1),
+                    "v": jax.lax.dynamic_update_slice_in_dim(
+                        cache["v"], v, 0, 1)}
+    out = dense(p["wo"], o.reshape(B, S, Hq * Dh))
+    return out, new_cache
+
+
+def _write_slot(buf: jax.Array, x: jax.Array, slot) -> jax.Array:
+    """Write x (B, 1, ...) at dynamic slot along axis 1."""
+    idx = (0, slot) + (0,) * (buf.ndim - 2)
+    return jax.lax.dynamic_update_slice(buf, x.astype(buf.dtype), idx)
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, dtype,
+                    window: int | None = None) -> dict:
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim_
+    Smax = min(max_len, window) if window is not None else max_len
+    return {"k": jnp.zeros((batch, Smax, Hkv, Dh), dtype),
+            "v": jnp.zeros((batch, Smax, Hkv, Dh), dtype)}

@@ -1,0 +1,162 @@
+"""Cascade early-exit decoding — the paper's technique applied to LMs.
+
+The mapping (DESIGN.md §2): cascade stages = layer groups; detection
+windows = sequences in the decode batch; stage thresholds = per-exit
+confidence thresholds; the paper's two execution strategies both exist:
+
+- **delayed rejection** (paper §7.1 baseline): every sequence runs all
+  layers; exits only *select* which logits to emit.  This is what a SIMD
+  batch executes anyway — `decode_step_cascade` returns per-token exit
+  depths so the serving layer can see the wasted work.
+- **wave compaction** (our TPU engine): the serving layer re-batches
+  sequences by *predicted* depth (`CascadeBatcher`), so a batch of easy
+  tokens really does stop at an early exit — the compute saving the
+  paper gets from per-core early termination.
+
+Exit heads are tied to the LM head (no extra vocab-sized parameters);
+confidence = top-1 softmax probability against a per-exit threshold,
+exactly a cascade stage's accept test.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ExitConfig", "exit_logits", "decode_step_cascade",
+           "CascadeBatcher", "expected_depth"]
+
+
+@dataclass(frozen=True)
+class ExitConfig:
+    exit_groups: tuple        # scan-group indices with an exit after them
+    thresholds: tuple         # per-exit top-1 prob threshold
+    min_group: int = 0
+
+
+def exit_logits(model, params, x):
+    """LM-head logits from an intermediate hidden state (tied head)."""
+    return model._head(params, x)
+
+
+def decode_step_cascade(model, params, token, cache, ecfg: ExitConfig):
+    """Masked (delayed-rejection) cascade decode step.
+
+    Runs the full stack (SIMD semantics) but evaluates each exit head and
+    records, per sequence, the first exit whose confidence clears the
+    threshold.  Returns (logits, new_cache, exit_depth (B,)).
+
+    The hidden-state capture uses the scan's per-group outputs, so cost
+    is one tied-head matmul per exit point.
+    """
+    cfg = model.cfg
+    x = model._embed(params, token[:, None])
+    cache_len = cache["len"]
+    B = token.shape[0]
+
+    n_exits = len(ecfg.exit_groups)
+    exit_set = np.asarray(ecfg.exit_groups)
+    thresholds = jnp.asarray(ecfg.thresholds, jnp.float32)
+
+    chosen = jnp.zeros((B, 1, cfg.vocab_size), jnp.float32)
+    depth = jnp.full((B,), model.n_scan, jnp.int32)
+    done = jnp.zeros((B,), bool)
+
+    moe_layer = cfg.moe is not None
+    new_cache = {"len": cache["len"] + 1}
+
+    if model.pre:
+        pre_new = []
+        for i, kind in enumerate(model.pre):
+            x, nc, _ = model._block(params["prelude"][i], x, kind,
+                                    cache["prelude"][i], cache_len, False)
+            pre_new.append(nc)
+        new_cache["prelude"] = pre_new
+
+    def group_fn(carry, xs):
+        xc, chosen_c, depth_c, done_c, gi = carry
+        gp, gcache = xs
+        gnew = []
+        for j, kind in enumerate(model.sb):
+            xc, nc, _ = model._block(gp[j], xc, kind, gcache[j], cache_len,
+                                     moe_layer)
+            gnew.append(nc)
+        # exit test after this group (static set → traced membership)
+        is_exit = jnp.isin(gi, jnp.asarray(exit_set))
+        ti = jnp.searchsorted(jnp.asarray(exit_set), gi)
+        thr = thresholds[jnp.clip(ti, 0, n_exits - 1)]
+        logits = exit_logits(model, params, xc)              # (B,1,V)
+        conf = jax.nn.softmax(logits.astype(jnp.float32), -1).max(-1)[:, 0]
+        fire = is_exit & (conf >= thr) & (~done_c)
+        chosen_c = jnp.where(fire[:, None, None], logits, chosen_c)
+        depth_c = jnp.where(fire, gi + 1, depth_c)
+        done_c = done_c | fire
+        return (xc, chosen_c, depth_c, done_c, gi + 1), gnew
+
+    (x, chosen, depth, done, _), scan_cache = jax.lax.scan(
+        group_fn, (x, chosen, depth, done, jnp.zeros((), jnp.int32)),
+        (params["scan"], cache["scan"]))
+    new_cache["scan"] = scan_cache
+
+    if model.post:
+        post_new = []
+        for i, kind in enumerate(model.post):
+            x, nc, _ = model._block(params["postlude"][i], x, kind,
+                                    cache["postlude"][i], cache_len, False)
+            post_new.append(nc)
+        new_cache["postlude"] = post_new
+
+    final = model._head(params, x)
+    logits = jnp.where(done[:, None, None], chosen, final)
+    return logits, new_cache, depth
+
+
+def expected_depth(depths: jax.Array, n_groups: int) -> float:
+    """Mean executed fraction — the cascade's compute-saving potential
+    (1.0 = no early exit ever fires)."""
+    return float(jnp.mean(depths) / max(n_groups, 1))
+
+
+class CascadeBatcher:
+    """Wave-compaction serving: bucket sequences by observed exit depth.
+
+    The paper's Botlev insight at the serving layer: deep (critical)
+    sequences are batched together and run the full stack on the fast
+    path; shallow ones share early-exit batches.  An EWMA of each
+    stream's recent exit depths predicts its bucket; misprediction just
+    costs the delayed-rejection overhead for that step.
+    """
+
+    def __init__(self, n_groups: int, boundaries: tuple = (0.34, 0.67),
+                 ewma: float = 0.8):
+        self.n_groups = n_groups
+        self.bounds = tuple(boundaries)
+        self.ewma = ewma
+        self._depth: dict = {}
+
+    def observe(self, stream_id, depth: float):
+        prev = self._depth.get(stream_id, float(self.n_groups))
+        self._depth[stream_id] = (self.ewma * prev + (1 - self.ewma)
+                                  * float(depth))
+
+    def bucket(self, stream_id) -> int:
+        frac = self._depth.get(stream_id, self.n_groups) / self.n_groups
+        for b, lim in enumerate(self.bounds):
+            if frac <= lim:
+                return b
+        return len(self.bounds)
+
+    def batches(self, stream_ids) -> list[list]:
+        out: list[list] = [[] for _ in range(len(self.bounds) + 1)]
+        for s in stream_ids:
+            out[self.bucket(s)].append(s)
+        return [b for b in out if b]
+
+    def group_budget(self, bucket_idx: int) -> int:
+        """Layer-group budget for a bucket (truncated stack depth)."""
+        if bucket_idx >= len(self.bounds):
+            return self.n_groups
+        return max(1, int(np.ceil(self.bounds[bucket_idx] * self.n_groups)))

@@ -1,0 +1,128 @@
+"""DeepSeek-V2 multi-head latent attention (arXiv:2405.04434).
+
+K/V are decompressed from a small shared latent (kv_lora) per token; RoPE
+lives on a decoupled per-token key of rope_dim dims.  Two execution paths:
+
+- prefill/train: decompress K/V and run flash attention (MHA);
+- decode: the **absorbed** form — W_UK is folded into the query so
+  attention scores are taken directly against the latent cache
+  (kv_lora + rope_dim per token), the paper's 93 % KV-cache reduction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (init_dense, dense, init_norm, apply_norm, apply_rope,
+                     flash_attention, NEG_INF)
+
+__all__ = ["init_mla", "mla_block", "init_mla_cache"]
+
+
+def init_mla(key, cfg, dtype) -> dict:
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qd = m.nope_dim + m.rope_dim
+    ks = jax.random.split(key, 7)
+    p = {
+        "wkv_a": init_dense(ks[0], D, m.kv_lora + m.rope_dim, dtype),
+        "kv_norm": init_norm("rmsnorm", m.kv_lora, dtype),
+        "wk_b": init_dense(ks[1], m.kv_lora, H * m.nope_dim, dtype),
+        "wv_b": init_dense(ks[2], m.kv_lora, H * m.v_dim, dtype),
+        "wo": init_dense(ks[3], H * m.v_dim, D, dtype,
+                         scale=(H * m.v_dim) ** -0.5),
+    }
+    if m.q_lora:
+        p["wq_a"] = init_dense(ks[4], D, m.q_lora, dtype)
+        p["q_norm"] = init_norm("rmsnorm", m.q_lora, dtype)
+        p["wq_b"] = init_dense(ks[5], m.q_lora, H * qd, dtype)
+    else:
+        p["wq"] = init_dense(ks[6], D, H * qd, dtype)
+    return p
+
+
+def _queries(p, x, cfg):
+    B, S, _ = x.shape
+    m, H = cfg.mla, cfg.n_heads
+    if m.q_lora:
+        cq = apply_norm("rmsnorm", p["q_norm"], dense(p["wq_a"], x))
+        q = dense(p["wq_b"], cq)
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(B, S, H, m.nope_dim + m.rope_dim)
+    return q[..., :m.nope_dim], q[..., m.nope_dim:]     # (nope), (rope)
+
+
+def mla_block(p: dict, x: jax.Array, cfg, *, cache=None, cache_len=None,
+              positions=None):
+    """x: (B, S, D) → (out, new_cache).  Cache = latent (ckv, krope)."""
+    B, S, D = x.shape
+    m, H = cfg.mla, cfg.n_heads
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+    decode = cache is not None and S == 1 and cache_len is not None
+    if positions is None:
+        positions = jnp.arange(S)[None, :] + (
+            jnp.asarray(cache_len).reshape(-1, 1) if decode else 0)
+
+    q_nope, q_rope = _queries(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = dense(p["wkv_a"], x)                          # (B,S,lora+rope)
+    ckv = apply_norm("rmsnorm", p["kv_norm"], kv_a[..., :m.kv_lora])
+    k_rope = kv_a[..., m.kv_lora:][:, :, None, :]        # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+
+    if decode:
+        # ---- absorbed path: score against the latent cache directly
+        Smax = cache["ckv"].shape[1]
+        slot = jnp.asarray(cache_len)
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, slot, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype),
+            (0, slot, 0))
+        # fold W_UK into q:  q_lat[b,h,l] = Σ_d q_nope[b,h,d]·W_UK[l,h,d]
+        wk = p["wk_b"]["w"].reshape(m.kv_lora, H, m.nope_dim)
+        q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], wk,
+                           preferred_element_type=jnp.float32)
+        s = (jnp.einsum("bhl,btl->bht", q_lat.astype(ckv_c.dtype), ckv_c,
+                        preferred_element_type=jnp.float32) +
+             jnp.einsum("bhr,btr->bht", q_rope[:, 0].astype(kr_c.dtype),
+                        kr_c, preferred_element_type=jnp.float32)) * scale
+        mask = jnp.arange(Smax)[None, :] <= slot
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        lat = jnp.einsum("bht,btl->bhl", pr.astype(ckv_c.dtype), ckv_c,
+                         preferred_element_type=jnp.float32)  # (B,H,lora)
+        wv = p["wv_b"]["w"].reshape(m.kv_lora, H, m.v_dim)
+        o = jnp.einsum("bhl,lhv->bhv", lat.astype(x.dtype), wv,
+                       preferred_element_type=jnp.float32)
+        o = o.reshape(B, 1, H * m.v_dim).astype(x.dtype)
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+    else:
+        # ---- decompress and flash (MHA: Hkv == H)
+        k_nope = dense(p["wk_b"], ckv).reshape(B, S, H, m.nope_dim)
+        v = dense(p["wv_b"], ckv).reshape(B, S, H, m.v_dim)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, m.rope_dim))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        o = flash_attention(q, k, v, True, None, cfg.attn_chunk_q,
+                            cfg.attn_chunk_kv, softmax_scale=scale)
+        o = o.reshape(B, S, H * m.v_dim)
+        new_cache = None
+        if cache is not None:       # prefill: persist latent cache
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)),
+                "krope": jax.lax.dynamic_update_slice(
+                    cache["krope"], k_rope.astype(cache["krope"].dtype),
+                    (0, 0, 0))}
+    return dense(p["wo"], o), new_cache
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, max_len, m.kv_lora), dtype),
+            "krope": jnp.zeros((batch, max_len, m.rope_dim), dtype)}

@@ -1,0 +1,132 @@
+"""Top-k routed mixture-of-experts with expert parallelism.
+
+TPU-native EP (DESIGN.md §5): activations at the MoE input are replicated
+across the ``model`` axis (the TP convention after an attention
+all-reduce), experts are sharded over ``model``.  Each model shard
+locally selects + gathers the tokens routed to *its* experts (capacity-
+bounded, MXU-friendly gather — no dynamic scatter), runs the expert FFNs,
+scatter-adds into a zero buffer, and one ``psum`` over ``model`` combines
+routed outputs — the same collective cost as a dense TP MLP.
+
+The router *is* the paper's scheduling problem in miniature: tokens =
+tasks, experts = heterogeneous executors, capacity = per-core queue; the
+aux load-balance loss plays the role of the rate-weighted partitioner.
+
+``moe_ffn`` is mesh-agnostic: pass ``axis_name=None`` (smoke tests /
+single device: all experts local) or the mesh axis name when called under
+``shard_map`` (see ``transformer.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_moe", "moe_ffn", "moe_capacity"]
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    mo, D = cfg.moe, cfg.d_model
+    E, F = mo.n_experts, mo.d_expert
+    ks = jax.random.split(key, 4)
+    std_in = D ** -0.5
+    std_out = F ** -0.5
+
+    def ew(k, shape, std):
+        return (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+
+    # shared (always-on) experts live OUTSIDE this pytree — the transformer
+    # computes them as a plain TP MLP outside the shard_map region.
+    return {
+        "router": {"w": (jax.random.normal(ks[0], (D, E), jnp.float32)
+                         * std_in).astype(jnp.float32)},   # fp32 router
+        "wi": ew(ks[1], (E, D, F), std_in),
+        "wg": ew(ks[2], (E, D, F), std_in),
+        "wo": ew(ks[3], (E, F, D), std_out),
+    }
+
+
+def moe_capacity(cfg, n_tokens: int, n_shards: int = 1) -> int:
+    """Static per-expert capacity for a local token count."""
+    mo = cfg.moe
+    per = n_tokens * mo.top_k / mo.n_experts
+    return max(8, int(per * mo.capacity_factor + 0.999))
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg, *, axis_name: str | None = None,
+            act: str = "silu", axis_data: str | tuple | None = None):
+    """x: (..., T, D) flattened to (T, D) internally.
+
+    Under ``shard_map`` (axis_name set): x is the local (replicated-over-
+    model) token block; expert weights p["wi"/"wg"/"wo"] are the local
+    expert shard (E_loc, ...).  Returns (y, aux_loss).
+
+    ``axis_data``: serving 2D layout (§Perf B) — expert weights are ALSO
+    sharded over the data axis on the hidden dim (wi/wg: D; wo: output D),
+    so decode steps never all-gather expert weights; the first einsum is a
+    partial contraction psum'd over ``axis_data`` (activations at decode
+    are ~MBs where the weights are ~GBs).  Output y is D-sliced over
+    ``axis_data``.
+    """
+    mo = cfg.moe
+    lead = x.shape[:-1]
+    D = x.shape[-1]
+    xt = x.reshape(-1, D)
+    T = xt.shape[0]
+    E = mo.n_experts
+    E_loc = p["wi"].shape[0]
+    n_shards = E // E_loc
+    rank = jax.lax.axis_index(axis_name) if axis_name else 0
+    e0 = rank * E_loc
+
+    # ---- routing (replicated compute on every model shard)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"]["w"])                     # (T, E) fp32
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = jax.lax.top_k(probs, mo.top_k)             # (T, k)
+    if mo.norm_topk_prob:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    top_p = top_p * mo.router_scale
+
+    # aux load-balance loss (Switch-style): E · Σ_e f_e · P_e
+    assign = jax.nn.one_hot(top_i, E, dtype=jnp.float32).sum(1)   # (T, E)
+    f_e = assign.mean(0)
+    P_e = probs.mean(0)
+    aux = E * jnp.sum(f_e * P_e) * mo.aux_loss_coef
+
+    # ---- capacity-bounded dispatch for the local experts
+    C = moe_capacity(cfg, T, n_shards)
+    # token weight for each local expert (0 if not routed here)
+    local_oh = jax.nn.one_hot(top_i - e0, E_loc, dtype=top_p.dtype)  # (T,k,El)
+    w_te = jnp.einsum("tk,tke->te", top_p, local_oh)           # (T, E_loc)
+    routed = w_te > 0
+    # earliest-token priority: value (T - t) picks the first C per expert
+    prio = jnp.where(routed.T, (T - jnp.arange(T))[None, :].astype(jnp.float32),
+                     0.0)                                     # (E_loc, T)
+    val, idx = jax.lax.top_k(prio, min(C, T))                 # (E_loc, C)
+    valid = val > 0
+    gather_w = jnp.take_along_axis(w_te.T, idx, 1) * valid    # (E_loc, C)
+
+    xs = jnp.take(xt, idx.reshape(-1), axis=0) \
+        .reshape(E_loc, -1, D) * valid[..., None].astype(xt.dtype)
+    if axis_data:
+        D_loc = p["wi"].shape[1]
+        d0 = jax.lax.axis_index(axis_data) * D_loc
+        xs_l = jax.lax.dynamic_slice_in_dim(xs, d0, D_loc, 2)
+        h = jnp.einsum("ecd,edf->ecf", xs_l, p["wi"].astype(xt.dtype))
+        g = jnp.einsum("ecd,edf->ecf", xs_l, p["wg"].astype(xt.dtype))
+        h = jax.lax.psum(h, axis_data)       # complete the D contraction
+        g = jax.lax.psum(g, axis_data)
+    else:
+        h = jnp.einsum("ecd,edf->ecf", xs, p["wi"].astype(xt.dtype))
+        g = jnp.einsum("ecd,edf->ecf", xs, p["wg"].astype(xt.dtype))
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    eo = jnp.einsum("ecf,efd->ecd", g * h, p["wo"].astype(xt.dtype))
+    eo = eo * gather_w[..., None].astype(eo.dtype)
+
+    D_out = eo.shape[-1]                     # D (1D path) or D_loc (2D)
+    y = jnp.zeros((T, D_out), eo.dtype).at[idx.reshape(-1)].add(
+        eo.reshape(-1, D_out), mode="drop")
+    if axis_name:
+        y = jax.lax.psum(y, axis_name)
+    return y.reshape(*lead, D_out), aux

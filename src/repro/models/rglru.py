@@ -1,0 +1,137 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+    a_t = exp(-c · softplus(Λ) ⊙ σ(r_t))
+
+Gates r, i are block-diagonal linear maps (n_heads blocks — Griffin's
+choice, which also makes them TP-shardable with zero cross-shard traffic).
+Train/prefill uses an associative scan over time (log-space decay for
+stability); decode is the O(1) recurrence.  The block wraps the
+recurrence Griffin-style: gelu gate branch ⊙ (conv1d → RG-LRU) branch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, dense
+
+__all__ = ["init_rglru", "rglru_block", "init_rglru_cache"]
+
+
+def _split_heads(x, n_heads):
+    B, S, W = x.shape
+    return x.reshape(B, S, n_heads, W // n_heads)
+
+
+def _block_linear(w: jax.Array, x: jax.Array, n_heads: int) -> jax.Array:
+    """Block-diagonal (H, w, w) map over (B, S, W=H·w)."""
+    xh = _split_heads(x, n_heads)
+    y = jnp.einsum("bshi,hij->bshj", xh, w.astype(x.dtype))
+    return y.reshape(x.shape)
+
+
+def init_rglru(key, cfg, dtype) -> dict:
+    g = cfg.rglru
+    D, W, H = cfg.d_model, g.width, cfg.n_heads
+    wh = W // H
+    ks = jax.random.split(key, 7)
+    std = wh ** -0.5
+    lam_init = jnp.log(jnp.expm1(  # softplus^-1 so that a^c ∈ [0.9, 0.999]
+        -jnp.log(jnp.linspace(0.9, 0.999, W)) / g.c))
+    return {
+        "wy": init_dense(ks[0], D, W, dtype),            # gelu gate branch
+        "wx": init_dense(ks[1], D, W, dtype),            # recurrence branch
+        "conv": {"w": (jax.random.normal(ks[2], (W, g.conv_width),
+                                         jnp.float32) * 0.1).astype(dtype),
+                 "b": jnp.zeros((W,), dtype)},
+        "gate": {"r": {"blocks": (jax.random.normal(
+                          ks[3], (H, wh, wh), jnp.float32) * std
+                          ).astype(dtype),
+                       "b": jnp.zeros((W,), dtype)},
+                 "i": {"blocks": (jax.random.normal(
+                          ks[4], (H, wh, wh), jnp.float32) * std
+                          ).astype(dtype),
+                       "b": jnp.zeros((W,), dtype)}},
+        "lam": lam_init.astype(jnp.float32),             # Λ (W,) fp32
+        "out_proj": init_dense(ks[5], W, D, dtype, scale=W ** -0.5),
+    }
+
+
+def _causal_conv(p, x, conv_state=None):
+    """Depthwise causal conv1d; x: (B, S, W), weight (W, cw).
+
+    ``conv_state``: (B, cw-1, W) carry for decode; returns (y, new_state).
+    """
+    W, cw = p["w"].shape
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, W), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # (B, S+cw-1, W)
+    y = sum(xp[:, i:i + x.shape[1]] * p["w"].astype(x.dtype)[None, None, :, i]
+            for i in range(cw))
+    y = y + p["b"].astype(x.dtype)
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad
+    return y, new_state
+
+
+def _rglru_scan(log_a: jax.Array, bx: jax.Array, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (time).
+
+    log_a, bx: (B, S, W) fp32.  Returns h (B, S, W) fp32.
+    """
+    if h0 is not None:
+        # fold the initial state into the first step
+        bx = bx.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, bx), axis=1)
+    return h
+
+
+def rglru_block(p: dict, x: jax.Array, cfg, *, cache=None, cache_len=None):
+    """x: (B, S, D) → (out, new_cache).  cache = {'h', 'conv'}."""
+    g = cfg.rglru
+    B, S, D = x.shape
+    decode = cache is not None and S == 1 and cache_len is not None
+
+    y = jax.nn.gelu(dense(p["wy"], x))                    # (B,S,W)
+    u = dense(p["wx"], x)
+    u, conv_state = _causal_conv(
+        p["conv"], u, cache["conv"] if decode else None)
+
+    r = _block_linear(p["gate"]["r"]["blocks"], u, cfg.n_heads) \
+        + p["gate"]["r"]["b"].astype(u.dtype)
+    i = _block_linear(p["gate"]["i"]["blocks"], u, cfg.n_heads) \
+        + p["gate"]["i"]["b"].astype(u.dtype)
+    decay = -g.c * jax.nn.softplus(p["lam"])              # (W,) fp32, < 0
+    log_a = decay * jax.nn.sigmoid(r.astype(jnp.float32))  # (B,S,W)
+    gated = jax.nn.sigmoid(i.astype(jnp.float32)) * u.astype(jnp.float32)
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * gated
+
+    if decode:
+        h_prev = cache["h"].astype(jnp.float32)           # (B, W)
+        h = jnp.exp(log_a[:, 0]) * h_prev + bx[:, 0]
+        new_cache = {"h": h.astype(cache["h"].dtype), "conv": conv_state}
+        hs = h[:, None]
+    else:
+        h0 = cache["h"].astype(jnp.float32) if cache is not None else None
+        hs = _rglru_scan(log_a, bx, h0)
+        new_cache = None
+        if cache is not None:        # prefill: persist the final state
+            new_cache = {"h": hs[:, -1].astype(cache["h"].dtype),
+                         "conv": conv_state}
+    out = dense(p["out_proj"], (y.astype(jnp.float32) * hs).astype(x.dtype))
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    g = cfg.rglru
+    return {"h": jnp.zeros((batch, g.width), jnp.float32),
+            "conv": jnp.zeros((batch, g.conv_width - 1, g.width), dtype)}

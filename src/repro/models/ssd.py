@@ -1,0 +1,161 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060), chunked
+matmul form — the TPU-native expression: all O(S) work becomes dense
+(L × L) / (N × P) einsums on the MXU, with one tiny scan across chunks.
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t ⊗ x_t ;   y_t = C_t · h_t + D x_t
+
+Decode is the O(1) recurrence over the carried (H, N, P) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, dense, rmsnorm
+
+__all__ = ["init_ssd", "ssd_block", "init_ssd_cache"]
+
+
+def init_ssd(key, cfg, dtype) -> dict:
+    s = cfg.ssd
+    D = cfg.d_model
+    din = s.expand * D
+    H = din // s.head_dim
+    G, N = s.n_groups, s.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": init_dense(ks[0], D, din, dtype),
+        "wx": init_dense(ks[1], D, din, dtype),
+        "wB": init_dense(ks[2], D, G * N, dtype),
+        "wC": init_dense(ks[3], D, G * N, dtype),
+        "wdt": init_dense(ks[4], D, H, dtype),
+        "conv_x": {"w": (jax.random.normal(ks[5], (din, s.conv_width),
+                                           jnp.float32) * 0.1).astype(dtype),
+                   "b": jnp.zeros((din,), dtype)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm": {"scale": jnp.ones((din,), dtype)},
+        "out_proj": init_dense(ks[6], din, D, dtype, scale=din ** -0.5),
+    }
+
+
+def _conv1d(p, x, state=None):
+    """Depthwise causal conv; x (B, S, C), weight (C, cw)."""
+    C, cw = p["w"].shape
+    pad = jnp.zeros((x.shape[0], cw - 1, C), x.dtype) if state is None \
+        else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * p["w"].astype(x.dtype)[None, None, :, i]
+            for i in range(cw))
+    return y + p["b"].astype(x.dtype), xp[:, -(cw - 1):]
+
+
+def _segsum(ca):
+    """Lower-triangular pairwise decay exp(ca_l - ca_s), masked s ≤ l.
+
+    ca: (..., L) fp32 cumulative log-decay → (..., L, L).
+    The mask is applied to the *exponent* (not the exp) — upper-triangle
+    entries hold large positive log-decays whose exp overflows, and
+    ``where(mask, exp(d), 0)`` would then backprop 0 × inf = NaN.
+    """
+    L = ca.shape[-1]
+    d = ca[..., :, None] - ca[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.exp(jnp.where(mask, d, -1e30))
+
+
+def ssd_block(p: dict, x: jax.Array, cfg, *, cache=None, cache_len=None):
+    """x: (B, S, D) → (out, new_cache).  cache = {'state', 'conv'}."""
+    s = cfg.ssd
+    B, S, D = x.shape
+    din = s.expand * D
+    H = din // s.head_dim
+    P_ = s.head_dim
+    G, N = s.n_groups, s.d_state
+    decode = cache is not None and S == 1 and cache_len is not None
+
+    z = dense(p["wz"], x)                               # (B,S,din)
+    u = dense(p["wx"], x)
+    u, conv_state = _conv1d(p["conv_x"], u,
+                            cache["conv"] if decode else None)
+    u = jax.nn.silu(u)
+    Bv = dense(p["wB"], x).reshape(B, S, G, N).astype(jnp.float32)
+    Cv = dense(p["wC"], x).reshape(B, S, G, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dense(p["wdt"], x).astype(jnp.float32)
+                         + p["dt_bias"])                # (B,S,H)
+    A = -jnp.exp(p["A_log"])                            # (H,) < 0
+    uh = u.reshape(B, S, H, P_).astype(jnp.float32)
+    rep = H // G                                        # heads per group
+    Bh = jnp.repeat(Bv, rep, axis=2)                    # (B,S,H,N)
+    Ch = jnp.repeat(Cv, rep, axis=2)
+
+    if decode:
+        st = cache["state"].astype(jnp.float32)         # (B,H,N,P)
+        a = jnp.exp(dt[:, 0] * A[None, :])              # (B,H)
+        inc = jnp.einsum("bhn,bhp->bhnp", Bh[:, 0] * dt[:, 0, :, None],
+                         uh[:, 0])
+        st = a[..., None, None] * st + inc
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, 0], st)
+        y = y + p["D_skip"][None, :, None] * uh[:, 0]
+        ys = y[:, None].reshape(B, 1, din)
+        new_cache = {"state": st.astype(cache["state"].dtype),
+                     "conv": conv_state}
+    else:
+        L = min(s.chunk, S)
+        Sp = -(-S // L) * L
+        pad = ((0, 0), (0, Sp - S))
+        uh_, Bh_, Ch_, dt_ = (
+            jnp.pad(a, pad + ((0, 0),) * (a.ndim - 2))
+            for a in (uh, Bh, Ch, dt))
+        nc = Sp // L
+        uc = uh_.reshape(B, nc, L, H, P_)
+        Bc = Bh_.reshape(B, nc, L, H, N)
+        Cc = Ch_.reshape(B, nc, L, H, N)
+        dtc = dt_.reshape(B, nc, L, H)
+        dA = dtc * A                                    # (B,nc,L,H) log-decay
+        ca = jnp.cumsum(dA, axis=2)
+        # intra-chunk: Y[l] = Σ_{s≤l} C_l·B_s exp(ca_l - ca_s) dt_s x_s
+        att = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)
+        dec = _segsum(ca.transpose(0, 1, 3, 2))         # (B,nc,H,L,L)
+        att = att * dec * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+        y_in = jnp.einsum("bchls,bcshp->bclhp", att, uc)
+        # chunk summaries: S_c = Σ_s exp(ca_L - ca_s) dt_s B_s ⊗ x_s
+        wts = jnp.exp(ca[:, :, -1:, :] - ca) * dtc      # (B,nc,L,H)
+        Sc = jnp.einsum("bcshn,bcsh,bcshp->bchnp", Bc, wts, uc)
+        # carry states across chunks: S_{c} = exp(Σ dA_c) S_{c-1} + Sc
+        tot = jnp.exp(ca[:, :, -1, :])                  # (B,nc,H)
+
+        def carry(st, inp):
+            t, sc = inp
+            st_new = t[..., None, None] * st + sc
+            return st_new, st
+
+        st0 = cache["state"].astype(jnp.float32) if cache is not None \
+            else jnp.zeros((B, H, N, P_), jnp.float32)
+        st_last, st_prevs = jax.lax.scan(
+            carry, st0, (tot.swapaxes(0, 1), Sc.swapaxes(0, 1)))
+        st_prevs = st_prevs.swapaxes(0, 1)              # (B,nc,H,N,P) pre-chunk
+        # inter-chunk: Y[l] += C_l exp(ca_l) S_prev
+        y_x = jnp.einsum("bclhn,bclh,bchnp->bclhp", Cc, jnp.exp(ca), st_prevs)
+        y = (y_in + y_x).reshape(B, Sp, H, P_)[:, :S]
+        y = y + p["D_skip"][None, None, :, None] * uh
+        ys = y.reshape(B, S, din)
+        new_cache = None
+        if cache is not None:        # prefill: persist the final state
+            new_cache = {"state": st_last.astype(cache["state"].dtype),
+                         "conv": conv_state}
+
+    ys = rmsnorm(ys.astype(x.dtype), p["norm"]["scale"])
+    ys = ys * jax.nn.silu(z)
+    return dense(p["out_proj"], ys), new_cache
+
+
+def init_ssd_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssd
+    din = s.expand * cfg.d_model
+    H = din // s.head_dim
+    return {"state": jnp.zeros((batch, H, s.d_state, s.head_dim),
+                               jnp.float32),
+            "conv": jnp.zeros((batch, s.conv_width - 1, din), dtype)}

@@ -1,0 +1,123 @@
+"""AdamW with cosine schedule — explicit-state, ZeRO-shardable.
+
+Moment tensors mirror the parameter pytree, so the ZeRO rule is free:
+whatever PartitionSpec shards a parameter shards its m/v (optimizer state
+is fully sharded over (fsdp × tp) — ZeRO-1/2 fall out of the rules in
+``distributed/sharding.py``).  Moment dtype is configurable: fp32 default;
+bf16 for the 405B config (DESIGN.md §5 memory budget)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "clip_by_global_norm"]
+
+# stacked leaves at least this large stream their update per layer slice
+CHUNK_MIN_SIZE = 1 << 28
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array            # () int32
+    m: dict
+    v: dict
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw_update(params, grads, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, max_grad_norm: float = 1.0):
+    """One AdamW step.  ``lr`` may be a scalar or a schedule value.
+    Weight decay skips 1-D leaves (norms/biases), the usual convention.
+
+    The clip scale is folded into the update (no clipped-gradient copies)
+    and stacked (scan-layer) leaves are updated one layer-slice at a time
+    via ``lax.map`` — the fp32 intermediates of a 405B-scale update stay
+    O(layer), not O(model)."""
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gn, 1e-9))
+    t = state.step + 1
+    tf = t.astype(jnp.float32)
+    c1 = 1.0 - b1 ** tf
+    c2 = 1.0 - b2 ** tf
+
+    def math(p, g, m, v, wd):
+        gf = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        delta = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        if wd:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    def chunked(p, g, m, v, wd, n_chunks):
+        """Stream the update over dim-0 slices inside a fori_loop: the
+        carried (p, m, v) buffers update in place (loop carries alias),
+        so fp32 intermediates stay O(model/n_chunks) — without breaking
+        the donation aliasing a stacked ``lax.map`` would lose."""
+        ck = p.shape[0] // n_chunks
+
+        def body(i, carry):
+            pc, mc, vc = carry
+            sl = partial(jax.lax.dynamic_slice_in_dim,
+                         start_index=i * ck, slice_size=ck, axis=0)
+            pn, mn, vn = math(sl(pc), sl(g), sl(mc), sl(vc), wd)
+            dus = partial(jax.lax.dynamic_update_slice_in_dim,
+                          start_index=i * ck, axis=0)
+            return (dus(pc, pn), dus(mc, mn), dus(vc, vn))
+
+        return jax.lax.fori_loop(0, n_chunks, body, (p, m, v))
+
+    def upd(p, g, m, v):
+        wd = bool(p.ndim >= 2 and weight_decay)
+        if p.ndim >= 3 and p.shape[0] >= 8 and p.size >= CHUNK_MIN_SIZE:
+            n = p.shape[0]
+            while p.shape[0] % n or n > 16:      # ≤ 16 even chunks
+                n -= 1
+            if n > 1:
+                return chunked(p, g, m, v, wd, n)
+        return math(p, g, m, v, wd)
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v)
+    p_new = jax.tree.map(lambda x: x[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda x: x[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda x: x[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return p_new, AdamWState(t, m_new, v_new), {"grad_norm": gn}
+
+
+def cosine_schedule(step, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, peak_lr * cos)

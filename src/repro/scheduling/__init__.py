@@ -1,0 +1,23 @@
+# Asymmetry-aware task scheduling + energy optimization (paper §6–§7):
+#   dag       — detection-task DAG (Fig. 19) with a calibrated work model
+#   executor  — discrete-event simulator of asymmetric multicore platforms
+#   botlev    — criticality-aware scheduler (Chronaki et al., the paper's §7.1)
+#   heft      — HEFT static baseline
+#   policies  — omp-static / dynamic-greedy / rate-weighted baselines
+#   energy    — calibrated power model (Odroid XU4, RPi 3B+, TPU-pod analogue)
+#   dvfs      — cluster-frequency optimizer (Figs 21–24, Table I)
+#   autotune  — step/scaleFactor accuracy-constrained sweep (Fig 20)
+#   hetero    — heterogeneous-pod work partitioner (TPU adaptation)
+from .dag import Task, TaskDAG, build_detection_dag, WorkModel  # noqa: F401
+from .executor import simulate, SimResult, Core  # noqa: F401
+from .botlev import BotlevScheduler  # noqa: F401
+from .heft import HEFTScheduler  # noqa: F401
+from .policies import (FIFOScheduler, StaticBlockScheduler,  # noqa: F401
+                       SequentialScheduler)
+from .energy import (Platform, CorePowerModel, odroid_xu4, rpi3b,  # noqa: F401
+                     tpu_v5e_pod, EXYNOS_BIG_FREQS, EXYNOS_LITTLE_FREQS)
+from .dvfs import DVFSPoint, dvfs_sweep, optimal_operating_point  # noqa: F401
+from .autotune import (SweepCell, accuracy_sweep, error_table,  # noqa: F401
+                       match_detections)
+from .hetero import (rate_weighted_split, HeteroPodPlan,  # noqa: F401
+                     mixed_pod_platform, replan_on_straggle)

@@ -1,0 +1,91 @@
+"""DVFS operating-point optimizer (paper §7.2, §7.4, Figs 21–24, Table I).
+
+Sweeps cluster frequencies × detector parameters (step, scaleFactor) on the
+discrete-event simulator + calibrated power model, then selects the point
+that minimizes energy subject to an accuracy constraint — the paper's
+methodology: "optimal values ... to tolerate an error constraint less than
+10 % of the total faces with the best detection time and the lowest
+possible energy consumption" (Table I).
+
+The accuracy term comes from the ``autotune`` sweep (error vs step/scale on
+synthetic corpora — Fig. 20); time/energy come from the simulator.  The
+paper only scales the big cluster ("modifying the frequency of the LITTLE
+cluster has not a meaningful impact on the energy consumption, but a big
+impact on the execution time" §7.4) — we default to the same sweep.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .dag import TaskDAG, build_detection_dag, WorkModel
+from .energy import Platform, odroid_xu4, EXYNOS_BIG_FREQS
+from .botlev import BotlevScheduler
+from .executor import simulate, SimResult
+
+__all__ = ["DVFSPoint", "dvfs_sweep", "optimal_operating_point"]
+
+
+@dataclass(frozen=True)
+class DVFSPoint:
+    f_big: float               # GHz
+    f_little: float            # GHz
+    step: int
+    scale_factor: float
+    makespan: float            # s (modeled)
+    energy: float              # J (modeled)
+    avg_power: float           # W (modeled)
+    error_frac: float          # total detection error / n_faces (autotune)
+
+    @property
+    def edp(self) -> float:    # energy-delay product (tie-break metric)
+        return self.energy * self.makespan
+
+
+def dvfs_sweep(stage_sizes: Sequence[int],
+               error_model: Callable[[int, float], float],
+               height: int = 480, width: int = 640, n_images: int = 10,
+               f_bigs: Sequence[float] = EXYNOS_BIG_FREQS,
+               f_littles: Sequence[float] = (1.4,),
+               steps: Sequence[int] = (1, 2, 3, 4),
+               scale_factors: Sequence[float] = (1.1, 1.2, 1.3, 1.5),
+               platform_fn: Callable[..., Platform] = odroid_xu4,
+               scheduler_fn: Callable[[], object] = BotlevScheduler,
+               work_model: WorkModel | None = None) -> list[DVFSPoint]:
+    """Full grid: {f_big} × {f_LITTLE} × {step} × {scaleFactor}.
+
+    ``error_model(step, scale) -> error_frac`` is measured once per
+    (step, scale) by the autotune sweep and reused across frequencies
+    (frequency does not change accuracy).
+    """
+    points: list[DVFSPoint] = []
+    for step in steps:
+        for sf in scale_factors:
+            dag = build_detection_dag(height, width, stage_sizes, step=step,
+                                      scale_factor=sf, n_images=n_images,
+                                      work_model=work_model)
+            err = float(error_model(step, sf))
+            for fb in f_bigs:
+                for fl in f_littles:
+                    plat = platform_fn(f_big=fb, f_little=fl)
+                    res: SimResult = simulate(dag, plat, scheduler_fn())
+                    points.append(DVFSPoint(fb, fl, step, sf, res.makespan,
+                                            res.energy, res.avg_power, err))
+    return points
+
+
+def optimal_operating_point(points: Sequence[DVFSPoint],
+                            max_error: float = 0.10) -> DVFSPoint:
+    """Paper Table I selection: among points meeting the error constraint,
+    minimize energy; break ties by makespan (the paper's 'best detection
+    time and lowest possible energy')."""
+    feas = [p for p in points if p.error_frac <= max_error]
+    if not feas:
+        # constraint infeasible on this corpus — degrade gracefully to the
+        # lowest-error point (the paper would widen the sweep instead)
+        best_err = min(p.error_frac for p in points)
+        feas = [p for p in points if p.error_frac <= best_err + 1e-9]
+    return min(feas, key=lambda p: (round(p.energy, 6), p.makespan))

@@ -1,0 +1,121 @@
+"""Calibrated power/performance models of the paper's platforms (+ TPU pod).
+
+All watt numbers on this container are **modeled** (DESIGN.md §2): the model
+is calibrated so that the paper's measured operating points are reproduced:
+
+- Raspberry Pi 3B+  : 2.5 W sequential, 5.5 W parallel(4)          (§6)
+- Odroid XU4        : 3.0 W sequential (1 big @ 2.0 GHz),
+                      6.85 W parallel (4 big @ 2.0 + 4 LITTLE @ 1.4) (§6)
+- DVFS points       : big cluster {2000, 1500, 1000, 800} MHz,
+                      LITTLE fixed 1400 MHz                        (§7.4)
+
+Dynamic power follows P = C · f · V(f)^2 per active core with published
+Exynos 5422 / BCM2837 voltage steps; static/idle power is a per-board
+constant.  Performance: work-units/second per core ∝ f x IPC(class); IPC
+ratios big:LITTLE calibrated from [23]'s observation that LITTLE cores add
+little (A7 ≈ 0.45 x A15 IPC; A53 ≈ 0.55 x A15 IPC).
+
+The TPU-pod analogue (``tpu_v5e_pod``) expresses the same structure at pod
+scale: "cores" are chips, frequency states are power states, idle power is
+the pod's static draw.  It drives the heterogeneous-pod partitioner and the
+energy-aware serving scheduler; numbers are public-spec estimates, used for
+*relative* scheduling decisions only.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+__all__ = ["CorePowerModel", "odroid_xu4", "rpi3b", "tpu_v5e_pod",
+           "EXYNOS_BIG_FREQS", "EXYNOS_LITTLE_FREQS"]
+
+# Exynos 5422 published DVFS voltage steps (V) per frequency (GHz).
+_A15_VOLTS = {2.0: 1.3625, 1.8: 1.2625, 1.5: 1.075, 1.2: 1.0125,
+              1.0: 0.975, 0.8: 0.9125}
+_A7_VOLTS = {1.4: 1.2750, 1.2: 1.1125, 1.0: 1.0375, 0.8: 0.9625}
+_A53_VOLTS = {1.4: 1.2500, 1.2: 1.1500, 1.0: 1.0500}
+
+EXYNOS_BIG_FREQS = (2.0, 1.5, 1.0, 0.8)      # the paper's sweep (GHz)
+EXYNOS_LITTLE_FREQS = (1.4, 1.0, 0.8)
+
+# Reference throughput: 1.0 work-unit/s ≡ one A15 core at 2.0 GHz.
+_IPC = {"A15": 1.0, "A7": 0.45, "A53": 0.55, "TPUv5e": 1.0, "TPUv4": 0.62}
+
+
+@dataclass(frozen=True)
+class CorePowerModel:
+    """One cluster: n identical cores at a common frequency (cluster DVFS)."""
+    name: str
+    cls: str                  # IPC class key
+    n: int
+    freq: float               # GHz (or power-state scalar for TPU)
+    volts: float
+    cap: float                # effective switched capacitance (W / (GHz·V²))
+
+    @property
+    def rate(self) -> float:
+        """Work-units/second for ONE core of this cluster."""
+        return _IPC[self.cls] * self.freq / 2.0
+
+    @property
+    def active_power(self) -> float:
+        """Dynamic watts for ONE active core."""
+        return self.cap * self.freq * self.volts ** 2
+
+    def at_freq(self, freq: float, volt_table: dict | None = None
+                ) -> "CorePowerModel":
+        table = volt_table or (_A15_VOLTS if self.cls == "A15" else
+                               _A7_VOLTS if self.cls == "A7" else
+                               _A53_VOLTS)
+        if freq not in table:
+            raise ValueError(f"no voltage step for {freq} GHz on {self.name}")
+        return replace(self, freq=freq, volts=table[freq])
+
+
+@dataclass(frozen=True)
+class Platform:
+    name: str
+    clusters: tuple[CorePowerModel, ...]
+    idle_power: float          # board static draw (W)
+
+    def cluster(self, name: str) -> CorePowerModel:
+        for c in self.clusters:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+    def with_freqs(self, **freqs: float) -> "Platform":
+        new = tuple(c.at_freq(freqs[c.name]) if c.name in freqs else c
+                    for c in self.clusters)
+        return replace(self, clusters=new)
+
+
+def odroid_xu4(f_big: float = 2.0, f_little: float = 1.4) -> Platform:
+    """Calibration: seq(1 big @2.0) = idle + 1.4 = 3.0 W;
+    par(4 big @2.0 + 4 LITTLE @1.4) = idle + 4·1.4 + 4·0.26 ≈ 6.85 W."""
+    big = CorePowerModel("big", "A15", 4, 2.0, _A15_VOLTS[2.0],
+                         cap=1.40 / (2.0 * _A15_VOLTS[2.0] ** 2))
+    little = CorePowerModel("LITTLE", "A7", 4, 1.4, _A7_VOLTS[1.4],
+                            cap=0.26 / (1.4 * _A7_VOLTS[1.4] ** 2))
+    p = Platform("odroid-xu4", (big, little), idle_power=1.59)
+    return p.with_freqs(big=f_big, LITTLE=f_little)
+
+
+def rpi3b(f: float = 1.4) -> Platform:
+    """Calibration: seq = 1.5 + 1.0 = 2.5 W; par(4) = 1.5 + 4·1.0 = 5.5 W."""
+    core = CorePowerModel("cortex-a53", "A53", 4, 1.4, _A53_VOLTS[1.4],
+                          cap=1.00 / (1.4 * _A53_VOLTS[1.4] ** 2))
+    p = Platform("rpi3b+", (core,), idle_power=1.50)
+    if f != 1.4:
+        p = p.with_freqs(**{"cortex-a53": f})
+    return p
+
+
+def tpu_v5e_pod(n_chips: int = 256, power_state: float = 1.0) -> Platform:
+    """Pod-scale analogue: chips as 'cores'.  ~200 W/chip active at full
+    power state (public v5e board envelope / 4 chips), ~45 W static.
+    Only *relative* numbers matter for scheduling decisions."""
+    chip = CorePowerModel("v5e", "TPUv5e", n_chips, power_state, 1.0,
+                          cap=155.0)
+    return Platform(f"tpu-v5e-{n_chips}", (chip,),
+                    idle_power=45.0 * n_chips)

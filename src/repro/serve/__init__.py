@@ -1,0 +1,2 @@
+from .serve_step import (make_prefill_step, make_decode_step,  # noqa: F401
+                         make_cascade_decode_step, generate)

@@ -1,0 +1,75 @@
+"""Serving steps: batched prefill + single-token decode (+ greedy/sampled
+generation loop and cascade early-exit serving).
+
+``serve_step`` for the dry-run shapes is the **decode** step: one new
+token against a KV/recurrent cache of ``seq_len`` (the shape's length),
+batch ``global_batch`` — exactly the ``decode_32k`` / ``long_500k``
+contract."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_prefill_step", "make_decode_step", "generate",
+           "make_cascade_decode_step"]
+
+
+def make_prefill_step(model):
+    def prefill_step(params, tokens, cache, prefix_embeds=None):
+        kw = {}
+        if prefix_embeds is not None:
+            kw["prefix_embeds"] = prefix_embeds
+        return model.prefill(params, tokens, cache, **kw)
+    return prefill_step
+
+
+def make_decode_step(model, *, sample: bool = False, temperature: float = 1.0):
+    def decode_step(params, token, cache, rng=None):
+        logits, cache = model.decode_step(params, token, cache)
+        lf = logits[:, -1].astype(jnp.float32)
+        if sample:
+            nxt = jax.random.categorical(rng, lf / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lf, axis=-1)
+        return nxt.astype(jnp.int32), cache, logits
+    return decode_step
+
+
+def make_cascade_decode_step(model, ecfg):
+    """Early-exit (paper-cascade) decode step; returns exit depths too."""
+    from repro.models.early_exit import decode_step_cascade
+
+    def decode_step(params, token, cache):
+        logits, cache, depth = decode_step_cascade(model, params, token,
+                                                   cache, ecfg)
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)
+        return nxt.astype(jnp.int32), cache, depth
+    return decode_step
+
+
+def generate(model, params, prompt_tokens, max_new: int = 32,
+             max_len: int | None = None, prefix_embeds=None,
+             sample: bool = False, seed: int = 0):
+    """Host-loop generation (smoke/examples scale)."""
+    B, S = prompt_tokens.shape
+    max_len = max_len or (S + max_new)
+    cache = model.init_cache(B, max_len)
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model, sample=sample))
+    logits, cache = prefill(params, prompt_tokens, cache,
+                            prefix_embeds=prefix_embeds) \
+        if prefix_embeds is not None else prefill(params, prompt_tokens,
+                                                  cache)
+    token = jnp.argmax(logits[:, -1].astype(jnp.float32), -1).astype(
+        jnp.int32)
+    out = [token]
+    rng = jax.random.key(seed)
+    for i in range(max_new - 1):
+        rng, sub = jax.random.split(rng)
+        token, cache, _ = decode(params, token, cache, rng=sub) \
+            if sample else decode(params, token, cache)
+        out.append(token)
+    return jnp.stack(out, axis=1)

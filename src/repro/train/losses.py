@@ -1,0 +1,44 @@
+"""Losses. Cross-entropy is written vocab-shard-safe: the label logit is
+taken with a one-hot einsum (a matmul over the sharded vocab dim → XLA
+lowers to partial matmul + small all-reduce) instead of
+``take_along_axis`` (which would all-gather the full (B, S, V) logits)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cross_entropy_loss"]
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None,
+                       z_loss: float = 1e-4):
+    """logits (B, S, V) any float dtype; labels (B, S) int32.
+
+    Returns (loss_scalar, metrics dict).  ``z_loss`` regularizes the
+    log-partition (PaLM-style) — also keeps fp32 softmax stable at 150k+
+    vocab.  ``mask``: 1.0 = count this position.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(-1, keepdims=True))
+    shifted = lf - m
+    sumexp = jnp.exp(shifted).sum(-1)
+    log_z = jnp.log(sumexp) + m[..., 0]                     # (B, S)
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=lf.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    nll = log_z - label_logit
+    zl = z_loss * jnp.square(log_z)
+    per_tok = nll + zl
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (per_tok * mask).sum() / denom
+    metrics = {
+        "loss": loss,
+        "nll": (nll * mask).sum() / denom,
+        "z_loss": (zl * mask).sum() / denom,
+        "accuracy": ((lf.argmax(-1) == labels) * mask).sum() / denom,
+        "tokens": mask.sum(),
+    }
+    return loss, metrics

@@ -1,0 +1,106 @@
+"""Train step: loss → grad → AdamW, with microbatch gradient accumulation
+and optional int8 gradient compression on the DP all-reduce.
+
+The step function is built once per (config, rules) and jitted by the
+launcher with explicit in/out shardings; activation sharding constraints
+live inside the model.  Remat policy comes from the config
+(``remat="block"`` checkpoints each scanned super-block)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               cosine_schedule)
+from .losses import cross_entropy_loss
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    step: jax.Array
+
+
+def init_train_state(model, key, moment_dtype=jnp.float32) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, adamw_init(params, moment_dtype),
+                      jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model, *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10000, weight_decay: float = 0.1,
+                    microbatch: int = 0, aux_weight: float = 1.0,
+                    compress_grads=None, accum_dtype=jnp.float32):
+    """Returns ``train_step(state, batch) -> (state', metrics)``.
+
+    batch: {"tokens": (B, S+1) int32} — inputs are [:, :-1], labels
+    [:, 1:]; optional "mask" (B, S), "prefix_embeds" for vlm/audio stubs.
+    ``microbatch`` > 0 splits B into chunks and accumulates grads (lax.scan
+    so compile size is constant).  ``compress_grads``: optional
+    fn(grads) -> grads applied between accumulation and the optimizer
+    (int8 compression hook from distributed/compression.py).
+    """
+
+    def loss_fn(params, tokens, labels, mask, prefix_embeds):
+        kw = {}
+        if prefix_embeds is not None:
+            kw["prefix_embeds"] = prefix_embeds
+        logits, aux = model.forward(params, tokens, **kw)
+        if model.cfg.input_mode == "tokens+prefix":
+            logits = logits[:, model.cfg.n_prefix_embeds:]
+        loss, metrics = cross_entropy_loss(logits, labels, mask)
+        metrics["aux_loss"] = aux
+        return loss + aux_weight * aux, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def batch_grads(params, batch):
+        tokens = batch["tokens"][:, :-1]
+        labels = batch["tokens"][:, 1:]
+        mask = batch.get("mask")
+        px = batch.get("prefix_embeds")
+        B = tokens.shape[0]
+        if not microbatch or microbatch >= B:
+            (loss, metrics), grads = grad_fn(params, tokens, labels, mask,
+                                             px)
+            return grads, metrics
+        n = B // microbatch
+
+        def acc(carry, i):
+            g_acc, m_acc = carry
+            sl = lambda x: (jax.lax.dynamic_slice_in_dim(
+                x, i * microbatch, microbatch, 0)
+                if x is not None else None)
+            (_, metrics), grads = grad_fn(params, sl(tokens), sl(labels),
+                                          sl(mask), sl(px))
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(accum_dtype) / n, g_acc, grads)
+            m_acc = jax.tree.map(lambda a, m: a + m / n, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        m0 = {"loss": 0.0, "nll": 0.0, "z_loss": 0.0, "accuracy": 0.0,
+              "tokens": 0.0, "aux_loss": 0.0}
+        m0 = jax.tree.map(jnp.float32, m0)
+        (grads, metrics), _ = jax.lax.scan(acc, (g0, m0), jnp.arange(n))
+        metrics["tokens"] = metrics["tokens"] * n      # summed, not meaned
+        return grads, metrics
+
+    def train_step(state: TrainState, batch):
+        grads, metrics = batch_grads(state.params, batch)
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+        lr = cosine_schedule(state.step, peak_lr, warmup, total_steps)
+        params, opt, om = adamw_update(state.params, grads, state.opt, lr,
+                                       weight_decay=weight_decay)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests see the real single-device CPU backend (the 512-device override is
+# ONLY for launch/dryrun.py); distributed tests that need a few devices
+# spawn subprocesses or use tests/distributed/conftest.py.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

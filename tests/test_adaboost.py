@@ -1,0 +1,64 @@
+"""AdaBoost cascade training (paper §3, Fig. 3): a quickly-trained tiny
+cascade must separate synthetic faces from negatives, and cascade
+composition must obey the DR/FPR product rule (Eq. 4)."""
+
+import numpy as np
+import pytest
+
+from repro.core.training import train_cascade, TrainConfig
+from repro.core.training.data import window_dataset
+from repro.core import load_cascade
+from repro.configs.viola_jones import DEFAULT_PRETRAINED
+
+
+@pytest.fixture(scope="module")
+def tiny_cascade():
+    cfg = TrainConfig(n_stages=2, n_pos=120, n_neg=120, max_features=300,
+                      max_weak_per_stage=8, stage_fpr=0.5, stage_dr=0.98,
+                      seed=5, verbose=False)
+    return train_cascade(cfg)
+
+
+def test_training_meets_stage_targets(tiny_cascade):
+    casc, info = tiny_cascade
+    assert casc.n_stages >= 1
+    assert info["overall_dr"] >= 0.9
+    assert info["overall_fpr"] <= 0.5 ** casc.n_stages + 0.1
+
+
+def test_eq4_product_rule(tiny_cascade):
+    """Overall DR/FPR ≈ per-stage products (paper Eq. 4)."""
+    casc, info = tiny_cascade
+    drs = [s["dr"] for s in info["stages"]]
+    fprs = [s["fpr"] for s in info["stages"]]
+    assert info["overall_dr"] <= np.prod(drs) + 0.05
+    assert info["overall_fpr"] <= np.prod(fprs) + 0.05
+
+
+def test_pretrained_separates_fresh_windows():
+    """The shipped cascade generalizes to unseen synthetic windows."""
+    from repro.core.features import stage_sum_windows
+    from repro.core.integral import integral_images, window_inv_sigma
+    import jax.numpy as jnp
+
+    casc, _ = load_cascade(DEFAULT_PRETRAINED)
+    rng = np.random.default_rng(123)
+    X, y = window_dataset(rng, n_pos=40, n_neg=40)
+
+    def passes(img) -> bool:
+        ii, ii_pair = integral_images(jnp.asarray(img, jnp.float32))
+        inv = window_inv_sigma(ii_pair, jnp.asarray([[0]]),
+                               jnp.asarray([[0]]), 24).reshape(-1)
+        ys = jnp.zeros((1,), jnp.int32)
+        off = np.asarray(casc.stage_offsets)
+        for s in range(casc.n_stages):
+            ss = stage_sum_windows(casc, ii, ys, ys, inv,
+                                   int(off[s]), int(off[s + 1]))
+            if float(ss[0]) < float(casc.stage_threshold[s]):
+                return False
+        return True
+
+    acc_pos = np.mean([passes(X[i]) for i in np.nonzero(y == 1)[0][:25]])
+    acc_neg = np.mean([not passes(X[i]) for i in np.nonzero(y == 0)[0][:25]])
+    assert acc_pos > 0.7, f"detection rate too low: {acc_pos}"
+    assert acc_neg > 0.7, f"false positive rate too high: {1 - acc_neg}"

@@ -1,0 +1,118 @@
+"""Checkpoint atomicity/elasticity + data-pipeline determinism."""
+
+import os
+import shutil
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.data import SyntheticTokens, FileTokens
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.integers(0, 10, (3,)), jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    t = _tree()
+    save_checkpoint(d, 5, t, metadata={"loss": 1.25})
+    got, step, meta = restore_checkpoint(d, t)
+    assert step == 5 and meta["loss"] == 1.25
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_partial_write_is_invisible(tmp_path):
+    """A crashed writer (leftover .tmp dir) never corrupts restore."""
+    d = str(tmp_path / "ckpt")
+    t = _tree()
+    save_checkpoint(d, 1, t)
+    os.makedirs(os.path.join(d, "step_0000000002.tmp"))  # simulated crash
+    with open(os.path.join(d, "step_0000000002.tmp", "leaf_0.npy"),
+              "wb") as f:
+        f.write(b"garbage")
+    assert latest_step(d) == 1
+    _, step, _ = restore_checkpoint(d, t)
+    assert step == 1
+
+
+def test_incomplete_final_dir_ignored(tmp_path):
+    """A step dir without manifest (rename raced) is not 'latest'."""
+    d = str(tmp_path / "ckpt")
+    t = _tree()
+    save_checkpoint(d, 3, t)
+    os.makedirs(os.path.join(d, "step_0000000009"))   # no manifest inside
+    assert latest_step(d) == 3
+
+
+def test_prune_keeps_newest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, t, keep=2)
+    steps = sorted(int(n[5:]) for n in os.listdir(d)
+                   if n.startswith("step_") and not n.endswith(".tmp"))
+    assert steps == [4, 5]
+
+
+def test_structure_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _tree())
+    bad = {"a": jnp.zeros((4, 8))}
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, bad)
+
+
+def test_restore_casts_dtype(tmp_path):
+    d = str(tmp_path / "ckpt")
+    t = {"w": jnp.ones((4,), jnp.float32)}
+    save_checkpoint(d, 1, t)
+    got, _, _ = restore_checkpoint(d, {"w": jnp.ones((4,), jnp.bfloat16)})
+    assert got["w"].dtype == jnp.bfloat16
+
+
+# --------------------------------------------------------------- pipeline
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 10_000), batch=st.integers(1, 16),
+       seq=st.integers(2, 64), seed=st.integers(0, 5))
+def test_synthetic_pipeline_deterministic(step, batch, seq, seed):
+    p1 = SyntheticTokens(1000, batch, seq, seed=seed)
+    p2 = SyntheticTokens(1000, batch, seq, seed=seed)
+    np.testing.assert_array_equal(p1(step)["tokens"], p2(step)["tokens"])
+    assert p1(step)["tokens"].shape == (batch, seq + 1)
+    assert p1(step)["tokens"].max() < 1000
+
+
+def test_synthetic_pipeline_rank_sharding_partitions_batch():
+    p = SyntheticTokens(1000, 8, 16, seed=1)
+    full = p(7)["tokens"]
+    parts = [p.batch_at(7, rank=r, world=4)["tokens"] for r in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full)
+
+
+def test_file_pipeline_deterministic(tmp_path):
+    path = str(tmp_path / "tokens.bin")
+    rng = np.random.default_rng(0)
+    rng.integers(0, 5000, 100_000, dtype=np.int32).tofile(path)
+    p = FileTokens(path, batch=4, seq_len=32)
+    a = p(3)["tokens"]
+    b = FileTokens(path, batch=4, seq_len=32)(3)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4, 33)
+
+
+def test_training_restart_reproduces_stream(tmp_path):
+    """checkpoint → crash → restore replays the identical batch sequence."""
+    p = SyntheticTokens(100, 2, 8, seed=3)
+    run1 = [p(s)["tokens"] for s in range(6)]
+    # 'restart' at step 3: stream depends only on step index
+    run2 = [p(s)["tokens"] for s in range(3, 6)]
+    for a, b in zip(run1[3:], run2):
+        np.testing.assert_array_equal(a, b)

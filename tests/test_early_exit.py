@@ -1,0 +1,59 @@
+"""Cascade early-exit decoding (the paper's technique on LMs)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.models.early_exit import ExitConfig, CascadeBatcher
+from repro.serve import make_cascade_decode_step, make_decode_step
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("olmo-1b").with_(n_layers=6)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 4, 12
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)))
+    cache = model.init_cache(B, 32)
+    _, cache = model.prefill(params, tokens, cache)
+    return model, params, tokens, cache
+
+
+def test_impossible_thresholds_match_plain_decode(setup):
+    model, params, tokens, cache = setup
+    ecfg = ExitConfig(exit_groups=(1, 3), thresholds=(1.01, 1.01))
+    step_c = make_cascade_decode_step(model, ecfg)
+    step_p = make_decode_step(model)
+    t1, c1, depth = step_c(params, tokens[:, -1], cache)
+    t2, c2, _ = step_p(params, tokens[:, -1], cache)
+    assert (np.asarray(depth) == model.n_scan).all()      # never exits
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_allclose(
+        np.asarray(c1["scan"][0]["k"], np.float32),
+        np.asarray(c2["scan"][0]["k"], np.float32), rtol=1e-5)
+
+
+def test_zero_threshold_exits_first_gate(setup):
+    model, params, tokens, cache = setup
+    ecfg = ExitConfig(exit_groups=(2,), thresholds=(0.0,))
+    step_c = make_cascade_decode_step(model, ecfg)
+    _, _, depth = step_c(params, tokens[:, -1], cache)
+    assert (np.asarray(depth) == 3).all()     # exits right after group 2
+
+
+def test_batcher_buckets_by_depth():
+    b = CascadeBatcher(n_groups=12, boundaries=(0.34, 0.67))
+    for _ in range(8):
+        b.observe("easy", 2.0)
+        b.observe("hard", 12.0)
+    assert b.bucket("easy") < b.bucket("hard")
+    batches = b.batches(["easy", "hard"])
+    assert ["easy"] in batches and ["hard"] in batches
+    assert b.group_budget(b.bucket("easy")) < 12
+    assert b.group_budget(b.bucket("hard")) == 12

@@ -1,0 +1,65 @@
+"""Pallas kernels vs pure-jnp oracle: shape/dtype sweeps (hypothesis) in
+interpret mode (CPU container; kernels target TPU BlockSpec tiling)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.core.integral import integral_images
+from repro.core import load_cascade
+from repro.configs.viola_jones import DEFAULT_PRETRAINED
+
+CASC, _ = load_cascade(DEFAULT_PRETRAINED)
+
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.integers(25, 140), w=st.integers(25, 180),
+       scale=st.sampled_from([1.0, 255.0]))
+def test_integral_image_kernel_matches_ref(h, w, scale):
+    rng = np.random.default_rng(h * 1000 + w)
+    img = jnp.asarray(rng.random((h, w), np.float32) * scale)
+    got = ops.integral_image(img, interpret=True, use_kernel=True)
+    want = ops.integral_image(img, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-2 * scale)
+
+
+@settings(max_examples=6, deadline=None)
+@given(h=st.integers(30, 100), w=st.integers(30, 120))
+def test_window_inv_sigma_kernel_matches_ref(h, w):
+    rng = np.random.default_rng(h * 77 + w)
+    img = jnp.asarray(rng.integers(0, 255, (h, w)).astype(np.float32))
+    _, ii_pair = integral_images(img)
+    ny, nx = h - 24 + 1, w - 24 + 1
+    got = ops.window_inv_sigma_grid(ii_pair, ny, nx, use_kernel=True)
+    want = ops.window_inv_sigma_grid(ii_pair, ny, nx, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("stage", [0, 1])
+@pytest.mark.parametrize("hw", [(40, 56), (64, 96)])
+def test_haar_stage_kernel_matches_ref(stage, hw):
+    if stage >= CASC.n_stages:
+        pytest.skip("pretrained cascade has fewer stages")
+    h, w = hw
+    rng = np.random.default_rng(42)
+    img = jnp.asarray(rng.integers(0, 255, (h, w)).astype(np.float32))
+    ii, ii_pair = integral_images(img)
+    ny, nx = h - 24 + 1, w - 24 + 1
+    inv = ops.window_inv_sigma_grid(ii_pair, ny, nx, use_kernel=False)
+    got = ops.dense_stage_sums(CASC, CASC, stage, ii, inv, interpret=True)
+    want = ops.dense_stage_sums_ref(CASC, CASC, stage, ii, inv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_integral_image_property_last_cell_is_total():
+    rng = np.random.default_rng(0)
+    img = rng.integers(0, 255, (48, 64)).astype(np.float32)
+    ii = np.asarray(ops.integral_image(jnp.asarray(img), use_kernel=True,
+                                       interpret=True))
+    assert abs(ii[-1, -1] - img.sum()) < 1e-2 * img.size
+    assert (ii[0] == 0).all() and (ii[:, 0] == 0).all()

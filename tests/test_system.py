@@ -1,0 +1,56 @@
+"""End-to-end behaviour of the paper's system: detect faces in rendered
+scenes, dense (paper baseline) vs wave (TPU) engines agree, and the
+detections match ground truth."""
+
+import numpy as np
+import pytest
+
+from repro.core import Detector, EngineConfig, load_cascade
+from repro.core.training.data import render_scene
+from repro.configs.viola_jones import DEFAULT_PRETRAINED
+from repro.scheduling.autotune import match_detections
+
+
+@pytest.fixture(scope="module")
+def cascade():
+    casc, meta = load_cascade(DEFAULT_PRETRAINED)
+    assert casc.n_stages >= 2
+    return casc
+
+
+@pytest.fixture(scope="module")
+def scene():
+    rng = np.random.default_rng(3)
+    return render_scene(rng, 128, 128, n_faces=1)
+
+
+def test_detects_rendered_face(cascade, scene):
+    img, gt = scene
+    det = Detector(cascade, EngineConfig(mode="wave", step=2,
+                                         scale_factor=1.25,
+                                         min_neighbors=2))
+    boxes = det.detect(img)
+    tp, fp, fn = match_detections(boxes, gt, iou_thresh=0.3)
+    assert tp >= 1, f"face not found: {boxes} vs {gt}"
+
+
+def test_engines_agree(cascade, scene):
+    img, _ = scene
+    kw = dict(step=2, scale_factor=1.25, min_neighbors=2)
+    dense = Detector(cascade, EngineConfig(mode="dense", **kw)).detect(img)
+    wave = Detector(cascade, EngineConfig(mode="wave", **kw)).detect(img)
+    assert dense.shape == wave.shape
+    assert np.array_equal(np.sort(dense, 0), np.sort(wave, 0))
+
+
+def test_work_profile_accounting(cascade, scene):
+    img, _ = scene
+    det = Detector(cascade, EngineConfig(mode="wave", step=2,
+                                         scale_factor=1.25))
+    prof = det.work_profile(img)
+    assert prof["weak_evals_early_exit"] <= prof["weak_evals_dense"]
+    assert prof["total_windows"] > 0
+    for lv in prof["per_level"]:
+        alive = np.asarray(lv["alive_counts"])
+        # survivors never increase across stages (cascade monotonicity)
+        assert (np.diff(alive) <= 0).all()

@@ -1,0 +1,134 @@
+"""Training substrate: loss descent, grad-accumulation equivalence,
+optimizer invariants, schedules, gradient compression."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.train import init_train_state, make_train_step
+from repro.train.losses import cross_entropy_loss
+from repro.optim.adamw import (adamw_init, adamw_update, cosine_schedule,
+                               global_norm)
+from repro.distributed.compression import (compress_leaf, decompress_leaf,
+                                           make_compressor)
+
+RNG = np.random.default_rng(0)
+
+
+def test_loss_decreases_memorizing_batch():
+    cfg = get_smoke_config("stablelm-1.6b")
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.key(0))
+    step = jax.jit(make_train_step(model, peak_lr=1e-3, warmup=3,
+                                   total_steps=60))
+    batch = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (4, 33)))}
+    first = None
+    for i in range(25):
+        state, m = step(state, batch)
+        first = first or float(m["loss"])
+    assert float(m["loss"]) < first * 0.5
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = get_smoke_config("olmo-1b")
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.key(0))
+    batch = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (4, 17)))}
+    s_full = jax.jit(make_train_step(model, peak_lr=1e-3, microbatch=0))
+    s_acc = jax.jit(make_train_step(model, peak_lr=1e-3, microbatch=2))
+    st1, m1 = s_full(state, batch)
+    st2, m2 = s_acc(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_cross_entropy_matches_naive():
+    logits = jnp.asarray(RNG.standard_normal((2, 5, 11)), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, 11, (2, 5)))
+    loss, m = cross_entropy_loss(logits, labels, z_loss=0.0)
+    naive = -jax.nn.log_softmax(logits)[
+        jnp.arange(2)[:, None], jnp.arange(5)[None], labels].mean()
+    np.testing.assert_allclose(float(loss), float(naive), rtol=1e-6)
+    assert 0.0 <= float(m["accuracy"]) <= 1.0
+
+
+def test_adamw_step_moves_toward_gradient():
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.ones((4, 4))}
+    st0 = adamw_init(params)
+    p1, st1, m = adamw_update(params, grads, st0, lr=0.1, weight_decay=0.0)
+    assert float(p1["w"][0, 0]) < 1.0
+    assert int(st1.step) == 1
+    assert float(m["grad_norm"]) == pytest.approx(4.0)
+
+
+def test_adamw_chunked_update_matches_direct(monkeypatch):
+    """Stacked-leaf streamed update == plain elementwise update."""
+    import repro.optim.adamw as A
+    big = jnp.asarray(RNG.standard_normal((16, 32, 24)), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal(big.shape), jnp.float32) * 0.01
+    st0 = adamw_init({"w": big})
+    monkeypatch.setattr(A, "CHUNK_MIN_SIZE", 1)      # force streamed path
+    p_chunk, st1, _ = A.adamw_update({"w": big}, {"w": g}, st0, lr=0.01)
+    monkeypatch.setattr(A, "CHUNK_MIN_SIZE", 1 << 60)   # force direct path
+    p_dir, _, _ = A.adamw_update({"w": big}, {"w": g}, st0, lr=0.01)
+    np.testing.assert_allclose(np.asarray(p_chunk["w"]),
+                               np.asarray(p_dir["w"]),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(jnp.asarray(s), 1.0, 10, 100))
+           for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(1.0)
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-2)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(scale=st.floats(1e-6, 1e3),
+       shape=st.sampled_from([(8,), (4, 5), (2, 3, 4)]))
+def test_int8_compression_roundtrip_error_bound(scale, shape):
+    g = jnp.asarray(RNG.standard_normal(shape), jnp.float32) * scale
+    q, s = compress_leaf(g)
+    back = decompress_leaf(q, s)
+    assert float(jnp.max(jnp.abs(back - g))) <= float(s) * 0.5 + 1e-9
+
+
+def test_error_feedback_preserves_mean_gradient():
+    """With error feedback, the accumulated quantized sum tracks the true
+    gradient sum (compression bias vanishes)."""
+    compress, get_ef = make_compressor()
+    true_sum = np.zeros((8, 8), np.float32)
+    quant_sum = np.zeros((8, 8), np.float32)
+    for i in range(50):
+        g = {"w": jnp.asarray(RNG.standard_normal((8, 8)), jnp.float32)}
+        true_sum += np.asarray(g["w"])
+        quant_sum += np.asarray(compress(g)["w"])
+    resid = np.abs(true_sum - quant_sum).max()
+    ef = np.abs(np.asarray(get_ef()["w"])).max()
+    assert resid <= ef + 1e-4      # all bias lives in the feedback buffer
+
+
+def test_compressed_training_still_converges():
+    cfg = get_smoke_config("olmo-1b")
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.key(0))
+    compress, _ = make_compressor()
+    step = jax.jit(make_train_step(model, peak_lr=1e-3, warmup=3,
+                                   total_steps=60, compress_grads=compress))
+    batch = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (4, 33)))}
+    first = None
+    for i in range(25):
+        state, m = step(state, batch)
+        first = first or float(m["loss"])
+    assert float(m["loss"]) < first * 0.6
