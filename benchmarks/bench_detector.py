@@ -50,6 +50,29 @@ def run(n_images: int = 5, hw: int = 128, fast: bool = False) -> list[dict]:
                  "TP": "-", "FP": "-", "FN": "-", "total_error": "-",
                  "precision": "-", "recall": "-",
                  "wall_s": 100 * (1 - o["wall_s"] / d["wall_s"])})
+
+    # ---- batched engine: sequential loop vs packed detect_batch (B=8)
+    det = systems[1][1].calibrated(scenes[0][0], safety=3.0)
+    imgs = [img for img, _ in corpus(8, hw, hw, faces=(1, 2), seed=33)]
+    singles = [det.detect(im) for im in imgs]          # warm + reference
+    batched = det.detect_batch(imgs, strategy="packed")
+    identical = all(np.array_equal(s, b) for s, b in zip(singles, batched))
+    with Timer() as t:
+        for im in imgs:
+            det.detect(im)
+    seq_s = t.seconds
+    with Timer() as t:
+        det.detect_batch(imgs, strategy="packed")
+    bat_s = t.seconds
+    rows.append({"system": f"batched engine B=8 (identical={identical})",
+                 "TP": "-", "FP": "-", "FN": "-", "total_error": "-",
+                 "precision": "-",
+                 "recall": "-",
+                 "wall_s": bat_s})
+    rows.append({"system": "— batched speedup vs one-at-a-time (x)",
+                 "TP": "-", "FP": "-", "FN": "-", "total_error": "-",
+                 "precision": "-", "recall": "-",
+                 "wall_s": seq_s / max(bat_s, 1e-9)})
     return rows
 
 

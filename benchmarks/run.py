@@ -19,7 +19,7 @@ BENCHES = [
     ("bench_param_sweep", "Fig 20  — error vs step/scaleFactor"),
     ("bench_dvfs", "Figs 21–24 + Table I — DVFS grid + optimum"),
     ("bench_detector", "Tables II/III — ours vs dense reference"),
-    ("bench_serving", "beyond-paper: cascade early-exit LM serving"),
+    ("bench_serving", "batched detection serving: throughput + latency"),
     ("bench_roofline", "roofline table from dry-run artifacts"),
 ]
 

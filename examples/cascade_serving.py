@@ -1,52 +1,47 @@
-"""Beyond-paper: cascade early-exit LM serving — the paper's stage-wise
-rejection + criticality batching applied to decoder LMs.
+"""Batched cascade-detection serving: request queue -> shape buckets ->
+rate-weighted pod shards -> packed ``detect_batch`` -> per-request rects.
 
     PYTHONPATH=src python examples/cascade_serving.py
 """
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.configs import get_smoke_config
-from repro.models import build_model
-from repro.models.early_exit import ExitConfig, CascadeBatcher
-from repro.serve import make_cascade_decode_step
+from repro.core import Detector, EngineConfig, paper_shaped_cascade
+from repro.core.training.data import render_scene
+from repro.serve import DetectorService, PodSpec
 
 
 def main() -> None:
-    cfg = get_smoke_config("olmo-1b").with_(n_layers=8)
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0))
-    B, S = 8, 16
+    # trained-scale cascade; wave engine with serving-friendly buckets
+    casc = paper_shaped_cascade(0, stage_sizes=[6, 10, 14, 20, 28,
+                                                60, 60, 60, 60, 60])
+    det = Detector(casc, EngineConfig(mode="wave", step=2, scale_factor=1.25,
+                                      min_neighbors=2, pad_multiple=32))
+
     rng = np.random.default_rng(0)
-    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
-    cache = model.init_cache(B, 64)
-    _, cache = jax.jit(model.prefill)(params, tokens, cache)
+    shapes = [(96, 96)] * 6 + [(70, 90), (100, 60)]
+    images = [render_scene(rng, h, w, n_faces=1)[0] for h, w in shapes]
 
-    # exits after scan groups 1/3/5 — cascade stages over layer groups
-    ecfg = ExitConfig(exit_groups=(1, 3, 5), thresholds=(0.6, 0.5, 0.4))
-    step = jax.jit(make_cascade_decode_step(model, ecfg))
+    svc = DetectorService(det, pods=(PodSpec("big", 1.0),
+                                     PodSpec("little", 0.4)),
+                          max_batch=8)
+    svc.warmup(images[0])          # profile-guided capacities + pod rates
+    print(f"calibrated capacity fracs: "
+          f"{[round(f, 3) for f in svc.detector.config.capacity_fracs]}")
 
-    batcher = CascadeBatcher(model.n_scan)
-    tok = tokens[:, -1]
-    all_depths = []
-    for t in range(16):
-        tok, cache, depth = step(params, tok, cache)
-        all_depths.append(np.asarray(depth))
-        for b in range(B):
-            batcher.observe(b, float(depth[b]))
-    depths = np.stack(all_depths)
+    results = svc.detect_many(images)
+    for i, (im, rects) in enumerate(zip(images, results)):
+        same = np.array_equal(rects, svc.detector.detect(im))
+        print(f"image {i} {im.shape}: {len(rects)} face(s), "
+              f"batched==sequential: {same}")
 
-    print(f"exit depth (of {model.n_scan} groups): "
-          f"mean={depths.mean():.2f}, min={depths.min()}, "
-          f"max={depths.max()}")
-    print(f"executed fraction (delayed rejection): "
-          f"{depths.mean() / model.n_scan:.1%}")
-    wave = sum(batcher.group_budget(batcher.bucket(b)) for b in range(B))
-    print(f"wave-compaction layer-groups/step: {wave} vs full {B * model.n_scan}"
-          f" → modeled compute/energy saving {1 - wave / (B * model.n_scan):.1%}")
-    print(f"buckets: {batcher.batches(list(range(B)))}")
+    st = svc.stats()
+    print(f"\nthroughput: {st['imgs_per_s']:.1f} imgs/s, "
+          f"latency p50/p95: {st['latency_ms_p50']:.0f}/"
+          f"{st['latency_ms_p95']:.0f} ms")
+    print("pod shares (rate-weighted):",
+          {p["name"]: p["images"] for p in st["pods"]},
+          f"imbalance {st['makespan_imbalance']:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 gate + a reference-mode benchmark smoke, as run by CI.
+#   ./scripts/ci.sh          full tier-1 + bench smoke
+#   FAST=1 ./scripts/ci.sh   same suite, fast benchmark settings only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1: pytest ==="
+python -m pytest -x -q
+
+echo "=== smoke: bench_detector (ref/dense vs ours, fast) ==="
+python -m benchmarks.run --fast --only bench_detector
+
+echo "CI OK"

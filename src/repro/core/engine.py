@@ -24,6 +24,28 @@ The first (densest) waves can run through the Pallas tile kernel
 gather-based oracle on the compacted window list, where a dense tile
 kernel would waste lanes.  This hybrid is the SIMD re-expression of the
 paper's "balance between parallelism and optimal computational workload".
+
+Batching (serving scale)
+------------------------
+``Detector.detect_batch`` runs many images at once.  Its default
+``strategy="packed"`` compiles one program per (bucket shape, batch size)
+that runs the dense waves per level over the whole stack and then compacts
+survivors from *every image and pyramid level* into one shared window list
+for the tail stages — amortizing the per-(image, level) static capacity
+floor across the flush (see ``_build_batch_fn``); after
+``Detector.calibrated`` this is several times faster than the
+one-at-a-time loop.  ``strategy="vmap"`` instead ``vmap``s ``level_fn``
+over a leading batch axis: one dispatch per pyramid level instead of one
+per (image, level), batched ``LevelResult``s, and per-image overflow
+accounting.  Mixed resolutions
+are handled by *shape bucketing*: with ``EngineConfig.pad_multiple > 0``
+every image is zero-padded up to the next multiple on each side, so a
+traffic mix of arbitrary shapes compiles only a handful of bucket
+programs.  Windows whose receptive field would sample padded pixels are
+masked out via a per-image dynamic ``limits`` argument, so padding never
+introduces detections.  The single-image ``detect`` uses the identical
+padded program, which makes ``detect_batch`` bit-identical per image to
+sequential ``detect`` under any bucket policy.
 """
 
 from __future__ import annotations
@@ -38,10 +60,19 @@ import jax.numpy as jnp
 from .cascade import Cascade, WINDOW
 from .integral import integral_images, window_inv_sigma
 from .features import stage_sum_windows
-from .pyramid import pyramid_plan, downscale_nearest
+from .pyramid import pyramid_plan, downscale_nearest, downscale_indices
 from . import nms
 
-__all__ = ["EngineConfig", "LevelResult", "Detector", "calibrate_capacities"]
+__all__ = ["EngineConfig", "LevelResult", "BatchResult", "Detector",
+           "calibrate_capacities"]
+
+_AREA = float(WINDOW * WINDOW)
+
+# static-shape floor of every compaction capacity: keeps `nonzero(size=...)`
+# shapes sane for tiny levels, and is exactly the per-(image, level) lane
+# waste that `detect_batch`'s shared compaction amortizes across the batch.
+CAP_FLOOR = 256
+BATCH_CAP_FLOOR = 128
 
 
 class EngineConfig(NamedTuple):
@@ -56,6 +87,15 @@ class EngineConfig(NamedTuple):
     use_pallas: bool = False       # dense waves via Pallas kernel
     min_neighbors: int = 3
     interpret: bool = True         # Pallas interpret mode (CPU container)
+    pad_multiple: int = 0          # shape-bucket rounding: images are padded
+    #                                up to the next multiple per side so mixed
+    #                                resolutions share a few compiled bucket
+    #                                programs (0 = exact shapes, no padding)
+    batch_capacity_fracs: tuple = ()  # per-compaction survivor fracs of the
+    #                                batched engine's *shared* window list,
+    #                                as fractions of the whole batch's window
+    #                                count; () = fall back to capacity_fracs,
+    #                                else the conservative auto schedule
 
 
 class LevelResult(NamedTuple):
@@ -64,6 +104,18 @@ class LevelResult(NamedTuple):
     valid: jax.Array         # (cap,) bool
     alive_counts: jax.Array  # (n_stages,) int32 — survivors after each stage
     overflow: jax.Array      # () bool — capacity exceeded (would drop windows)
+
+
+class BatchResult(NamedTuple):
+    """Survivors of a whole (batch x pyramid) packed detection pass."""
+    img: jax.Array           # (cap,) int32 batch index (-1 = invalid lane)
+    lvl: jax.Array           # (cap,) int32 pyramid-level index
+    ys: jax.Array            # (cap,) int32 window origin at that level
+    xs: jax.Array            # (cap,) int32
+    valid: jax.Array         # (cap,) bool
+    alive_counts: jax.Array  # (n_stages, B) int32 — per-image survivors after
+    #                          each stage, summed over pyramid levels
+    overflow: jax.Array      # () bool — shared capacity exceeded
 
 
 def _auto_capacities(n_windows: int, n_compactions: int,
@@ -77,7 +129,8 @@ def _auto_capacities(n_windows: int, n_compactions: int,
             # (first compaction keeps everything — can never overflow);
             # profile-guided schedules via calibrate_capacities are tighter.
             f = max(0.5 ** i, 0.08)
-        caps.append(max(int(math.ceil(n_windows * min(f, 1.0))), 256))
+        cap = max(int(math.ceil(n_windows * min(f, 1.0))), CAP_FLOOR)
+        caps.append(min(cap, n_windows))  # never more lanes than windows
     return caps
 
 
@@ -87,6 +140,56 @@ def calibrate_capacities(alive_counts: np.ndarray, n_windows: int,
     counts (run the engine once with generous capacities, feed back)."""
     fr = np.asarray(alive_counts, np.float64) / max(n_windows, 1)
     return tuple(float(min(1.0, f * safety + 1e-3)) for f in fr)
+
+
+def _window_limits(h_valid, w_valid, level_h: int, level_w: int,
+                   pad_h: int, pad_w: int):
+    """Inclusive max window origin (y_lim, x_lim) at one pyramid level so the
+    window samples only valid (unpadded) source pixels.
+
+    ``downscale_nearest`` maps level row ``r`` to source row
+    ``(r * pad_h) // level_h``; a window rooted at ``y`` is valid iff its last
+    sampled row is ``< h_valid``, i.e. ``y <= (h_valid*level_h - 1)//pad_h -
+    (WINDOW - 1)``.  Works identically on host ints and traced int32 arrays.
+    """
+    y_lim = (h_valid * level_h - 1) // pad_h - (WINDOW - 1)
+    x_lim = (w_valid * level_w - 1) // pad_w - (WINDOW - 1)
+    return y_lim, x_lim
+
+
+def _packed_stage_sum(cascade: Cascade, ii_flat: jax.Array, img: jax.Array,
+                      base: jax.Array, stride: jax.Array, ys: jax.Array,
+                      xs: jax.Array, inv_sigma: jax.Array, k0, k1) -> jax.Array:
+    """Stage sum over a *packed* window list whose entries live on different
+    images and pyramid levels.  ``ii_flat`` is (B, sum_l (h_l+1)*(w_l+1)) —
+    every level's SAT flattened and concatenated, so no level is padded to
+    the bucket resolution; ``base``/``stride`` are each window's level SAT
+    offset and row stride.  Per-window arithmetic matches
+    ``features.stage_sum_windows`` bit-for-bit — same rectangle accumulation
+    order, same normalization — only the SAT lookup is through the packed
+    (img, base + y*stride + x) indexing."""
+
+    def rect(y0, x0, rh, rw):
+        y1, x1 = y0 + rh, x0 + rw
+        return (ii_flat[img, base + y1 * stride + x1]
+                - ii_flat[img, base + y0 * stride + x1]
+                - ii_flat[img, base + y1 * stride + x0]
+                + ii_flat[img, base + y0 * stride + x0])
+
+    def body(k, acc):
+        rects = jax.lax.dynamic_index_in_dim(cascade.rect_xywh, k, 0, False)
+        w = jax.lax.dynamic_index_in_dim(cascade.rect_w, k, 0, False)
+        feat = jnp.zeros_like(ys, jnp.float32)
+        for r in range(rects.shape[0]):
+            rx, ry, rw, rh = rects[r, 0], rects[r, 1], rects[r, 2], rects[r, 3]
+            feat = feat + w[r] * rect(ys + ry, xs + rx, rh, rw)
+        f_norm = feat * inv_sigma / _AREA
+        vote = jnp.where(f_norm < cascade.wc_threshold[k],
+                         cascade.left_val[k], cascade.right_val[k])
+        return acc + vote
+
+    init = jnp.zeros_like(ys, jnp.float32)
+    return jax.lax.fori_loop(k0, k1, body, init)
 
 
 class Detector:
@@ -102,7 +205,10 @@ class Detector:
         self.config = config
         self.stage_bounds = tuple(int(o) for o in np.asarray(cascade.stage_offsets))
         self.n_stages = cascade.n_stages
-        self._level_fns: dict = {}
+        self._raw_level_fns: dict = {}   # (h, w) -> unjitted level fn
+        self._level_fns: dict = {}       # (h, w) -> jitted level fn
+        self._vmap_level_fns: dict = {}  # (h, w, B) -> jit(vmap(level fn))
+        self._batch_fns: dict = {}       # (Hp, Wp, B) -> packed batch fn
 
     # ---------------------------------------------------------------- plan
     def _segments(self) -> list[tuple[int, int, bool]]:
@@ -139,7 +245,8 @@ class Detector:
         if cfg.use_pallas:
             from repro.kernels import ops as kops
 
-        def level_fn(cascade: Cascade, img: jax.Array) -> LevelResult:
+        def level_fn(cascade: Cascade, img: jax.Array,
+                     limits: jax.Array) -> LevelResult:
             ii, ii_pair = integral_images(img)
             gy = jnp.arange(ny, dtype=jnp.int32) * step
             gx = jnp.arange(nx, dtype=jnp.int32) * step
@@ -149,7 +256,9 @@ class Detector:
                 ii_pair, gy[:, None], gx[None, :], WINDOW)      # (ny, nx)
             inv_sigma = inv_sigma_grid.reshape(-1)
 
-            alive = jnp.ones((n_windows,), bool)     # dense-grid liveness
+            # dense-grid liveness; ``limits`` masks windows whose receptive
+            # field would sample padded pixels (permissive when unpadded)
+            alive = (ys <= limits[0]) & (xs <= limits[1])
             counts: list[jax.Array] = []
             overflow = jnp.asarray(False)
 
@@ -210,24 +319,70 @@ class Detector:
             return LevelResult(out_ys, out_xs, cur_valid,
                                jnp.stack(counts).astype(jnp.int32), overflow)
 
-        return jax.jit(level_fn)
+        return level_fn
+
+    def _raw_level_fn(self, h: int, w: int):
+        key = (h, w)
+        if key not in self._raw_level_fns:
+            self._raw_level_fns[key] = self._build_level_fn(h, w)
+        return self._raw_level_fns[key]
 
     def _level_fn(self, h: int, w: int):
         key = (h, w)
         if key not in self._level_fns:
-            self._level_fns[key] = self._build_level_fn(h, w)
+            self._level_fns[key] = jax.jit(self._raw_level_fn(h, w))
         return self._level_fns[key]
+
+    def _vmap_level_fn(self, h: int, w: int, batch: int):
+        """jit(vmap(level_fn)) — batch variants share the per-shape builder."""
+        key = (h, w, batch)
+        if key not in self._vmap_level_fns:
+            self._vmap_level_fns[key] = jax.jit(
+                jax.vmap(self._raw_level_fn(h, w), in_axes=(None, 0, 0)))
+        return self._vmap_level_fns[key]
+
+    # ------------------------------------------------------------ buckets
+    def _bucket_hw(self, h: int, w: int) -> tuple[int, int]:
+        """Shape bucket for an (h, w) image under the pad policy."""
+        m = self.config.pad_multiple
+        if m <= 0:
+            return h, w
+        hp = max(((h + m - 1) // m) * m, WINDOW)
+        wp = max(((w + m - 1) // m) * m, WINDOW)
+        return hp, wp
+
+    def _padded_plan(self, h: int, w: int):
+        hp, wp = self._bucket_hw(h, w)
+        return hp, wp, pyramid_plan(hp, wp, self.config.scale_factor)
+
+    @staticmethod
+    def _decode_rects(ys: np.ndarray, xs: np.ndarray,
+                      scales: np.ndarray) -> np.ndarray:
+        """Window origins (level coords) -> (N, 4) int32 [x, y, w, h] rects
+        in image coords (round-half-even, matching ``round``)."""
+        ys = np.asarray(ys, np.float64)
+        xs = np.asarray(xs, np.float64)
+        scales = np.broadcast_to(np.asarray(scales, np.float64), ys.shape)
+        w = np.rint(WINDOW * scales)
+        return np.stack([np.rint(xs * scales), np.rint(ys * scales), w, w],
+                        axis=1).astype(np.int32).reshape(-1, 4)
 
     # ---------------------------------------------------------------- public
     def detect_raw(self, image) -> list[tuple[LevelResult, float]]:
         """Per-level raw results (device arrays) + level scales."""
-        image = jnp.asarray(image, jnp.float32)
-        plan = pyramid_plan(image.shape[0], image.shape[1],
-                            self.config.scale_factor)
+        image = np.asarray(image, np.float32)
+        h, w = image.shape
+        hp, wp, plan = self._padded_plan(h, w)
+        if (hp, wp) != (h, w):
+            image = np.pad(image, ((0, hp - h), (0, wp - w)))
+        image = jnp.asarray(image)
         out = []
         for lv in plan:
             img_s = downscale_nearest(image, lv.height, lv.width)
-            res = self._level_fn(lv.height, lv.width)(self.cascade, img_s)
+            limits = jnp.asarray(
+                _window_limits(h, w, lv.height, lv.width, hp, wp), jnp.int32)
+            res = self._level_fn(lv.height, lv.width)(
+                self.cascade, img_s, limits)
             out.append((res, lv.scale))
         return out
 
@@ -239,17 +394,335 @@ class Detector:
                 raise RuntimeError(
                     "wave-engine capacity overflow; raise capacity_fracs "
                     "(see calibrate_capacities)")
-            ys = np.asarray(res.ys)
-            xs = np.asarray(res.xs)
             val = np.asarray(res.valid)
-            for y, x in zip(ys[val], xs[val]):
-                w = int(round(WINDOW * scale))
-                rects.append((int(round(x * scale)), int(round(y * scale)),
-                              w, w))
-        rects = np.asarray(rects, np.int32).reshape(-1, 4)
+            rects.append(self._decode_rects(np.asarray(res.ys)[val],
+                                            np.asarray(res.xs)[val],
+                                            scale))
+        rects = (np.concatenate(rects, axis=0) if rects
+                 else np.zeros((0, 4), np.int32))
         if not group:
             return rects
         return nms.group_rectangles(rects, self.config.min_neighbors)
+
+    # ---------------------------------------------------------------- batch
+    def _dense_prefix(self) -> int:
+        """Number of leading stages run as dense (full-grid) waves."""
+        return sum(s1 - s0 for (s0, s1, dense) in self._segments() if dense)
+
+    def _shared_caps(self, n_slots: int, batch: int) -> list[int]:
+        """Per-compaction capacities of the batched engine's shared window
+        list (one entry per tail segment; at least one).  Mirrors
+        ``_auto_capacities`` but over the whole batch's windows, so the
+        static floor is paid once per flush instead of per (image, level)."""
+        segs = self._segments()
+        n_comp = max(sum(1 for (_, _, d) in segs if not d), 1)
+        bf = self.config.batch_capacity_fracs or self.config.capacity_fracs
+        total = n_slots * batch
+        caps: list[int] = []
+        for k in range(n_comp):
+            if k < len(bf):
+                f = float(bf[k])
+            else:
+                # conservative auto schedule, as in _auto_capacities: the
+                # first compaction keeps everything, then halve with a floor
+                f = max(0.5 ** k, 0.08)
+            cap = max(int(math.ceil(total * min(f, 1.0))), BATCH_CAP_FLOOR)
+            cap = min(cap, caps[-1] if caps else total)
+            caps.append(cap)
+        return caps
+
+    def _build_batch_fn(self, hp: int, wp: int, batch: int):
+        """One jitted program per (bucket shape, batch size): per-level dense
+        waves over the whole stack, then *shared* compactions — survivors
+        from every (image, level) are packed into one window list for the
+        tail stages, recompacted per segment exactly like the single-image
+        wave engine.  This is the paper's lane-occupancy argument applied
+        across the batch: the per-(image, level) static capacity floor
+        (``CAP_FLOOR`` lanes even when a handful of windows survive) is paid
+        once per flush instead of B*L times."""
+        cfg = self.config
+        step = cfg.step
+        plan = pyramid_plan(hp, wp, cfg.scale_factor)
+        n_dense = self._dense_prefix()
+        bounds = self.stage_bounds
+        n_stages = self.n_stages
+
+        # static per-level geometry + flattened slot / SAT-layout tables
+        level_geo = []
+        lvl_parts, y_parts, x_parts = [], [], []
+        sat_sizes, sat_strides = [], []
+        for li, lv in enumerate(plan):
+            ny = (lv.height - WINDOW) // step + 1
+            nx = (lv.width - WINDOW) // step + 1
+            gy = np.arange(ny, dtype=np.int32) * step
+            gx = np.arange(nx, dtype=np.int32) * step
+            level_geo.append((lv, ny, nx, gy, gx))
+            lvl_parts.append(np.full(ny * nx, li, np.int32))
+            y_parts.append(np.repeat(gy, nx))
+            x_parts.append(np.tile(gx, ny))
+            sat_sizes.append((lv.height + 1) * (lv.width + 1))
+            sat_strides.append(lv.width + 1)
+        lvl_of_slot = jnp.asarray(np.concatenate(lvl_parts))
+        y_of_slot = jnp.asarray(np.concatenate(y_parts))
+        x_of_slot = jnp.asarray(np.concatenate(x_parts))
+        sat_base_of_lvl = jnp.asarray(np.concatenate(
+            [[0], np.cumsum(sat_sizes)[:-1]]).astype(np.int32))
+        sat_stride_of_lvl = jnp.asarray(np.asarray(sat_strides, np.int32))
+        n_slots = int(lvl_of_slot.shape[0])
+        shared_caps = self._shared_caps(n_slots, batch)
+        tail_segs = [(s0, s1) for (s0, s1, dense) in self._segments()
+                     if not dense]
+
+        def batch_fn(cascade: Cascade, stack: jax.Array,
+                     valid_hw: jax.Array) -> BatchResult:
+            # stack: (B, hp, wp) f32; valid_hw: (B, 2) int32 true shapes
+            counts = jnp.zeros((n_stages, batch), jnp.int32)
+            # per-level SATs, flattened per level and concatenated, feed the
+            # packed tail's gathers; dense mode (no tail) never builds them
+            sat_parts: list = []
+            alive_parts, inv_parts = [], []
+            for li, (lv, ny, nx, gy, gx) in enumerate(level_geo):
+                ys_idx = downscale_indices(hp, lv.height)
+                xs_idx = downscale_indices(wp, lv.width)
+                img_l = stack[:, ys_idx[:, None], xs_idx[None, :]]
+
+                def head(img):
+                    ii, ii_pair = integral_images(img)
+                    inv = window_inv_sigma(
+                        ii_pair, jnp.asarray(gy)[:, None],
+                        jnp.asarray(gx)[None, :], WINDOW)
+                    return ii, inv.reshape(-1)
+
+                ii_l, inv_l = jax.vmap(head)(img_l)          # (B,h+1,w+1),(B,n)
+                if tail_segs:
+                    sat_parts.append(ii_l.reshape(batch, -1))
+                ys_w = jnp.asarray(np.repeat(gy, nx))
+                xs_w = jnp.asarray(np.tile(gx, ny))
+                y_lim, x_lim = _window_limits(
+                    valid_hw[:, 0], valid_hw[:, 1], lv.height, lv.width,
+                    hp, wp)                                   # (B,), (B,)
+                alive_l = ((ys_w[None, :] <= y_lim[:, None])
+                           & (xs_w[None, :] <= x_lim[:, None]))  # (B, n)
+                for s in range(n_dense):
+                    k0, k1 = bounds[s], bounds[s + 1]
+                    ss = jax.vmap(
+                        lambda ii_b, inv_b: stage_sum_windows(
+                            cascade, ii_b, ys_w, xs_w, inv_b, k0, k1)
+                    )(ii_l, inv_l)                            # (B, n)
+                    alive_l = alive_l & (ss >= cascade.stage_threshold[s])
+                    counts = counts.at[s].add(
+                        alive_l.sum(axis=1).astype(jnp.int32))
+                alive_parts.append(alive_l)
+                inv_parts.append(inv_l)
+
+            # ---- shared compactions across the whole (batch x pyramid):
+            # survivors from every image and level share one window list,
+            # recompacted per tail segment like the single-image wave engine
+            alive_flat = jnp.concatenate(alive_parts, axis=1).reshape(-1)
+            inv_flat = jnp.concatenate(inv_parts, axis=1).reshape(-1)
+            ii_flat = (jnp.concatenate(sat_parts, axis=1) if tail_segs
+                       else None)                         # (B, sum sat sizes)
+            cap0 = shared_caps[0]
+            overflow = alive_flat.sum() > cap0
+            idx = jnp.nonzero(alive_flat, size=cap0, fill_value=-1)[0]
+            sel = jnp.maximum(idx, 0)
+            valid = idx >= 0
+            b_sel = sel // n_slots
+            slot = sel % n_slots
+            lvl_sel = jnp.take(lvl_of_slot, slot)
+            y_sel = jnp.take(y_of_slot, slot)
+            x_sel = jnp.take(x_of_slot, slot)
+            inv_sel = jnp.take(inv_flat, sel)
+
+            for ki, (s0, s1) in enumerate(tail_segs):
+                if ki > 0:  # recompact the shrinking shared list
+                    cap = shared_caps[min(ki, len(shared_caps) - 1)]
+                    overflow = overflow | (valid.sum() > cap)
+                    idx = jnp.nonzero(valid, size=cap, fill_value=-1)[0]
+                    sel = jnp.maximum(idx, 0)
+                    b_sel = jnp.take(b_sel, sel)
+                    lvl_sel = jnp.take(lvl_sel, sel)
+                    y_sel = jnp.take(y_sel, sel)
+                    x_sel = jnp.take(x_sel, sel)
+                    inv_sel = jnp.take(inv_sel, sel)
+                    valid = idx >= 0
+                base_sel = jnp.take(sat_base_of_lvl, lvl_sel)
+                stride_sel = jnp.take(sat_stride_of_lvl, lvl_sel)
+                for s in range(s0, s1):
+                    k0, k1 = bounds[s], bounds[s + 1]
+                    ss = _packed_stage_sum(cascade, ii_flat, b_sel, base_sel,
+                                           stride_sel, y_sel, x_sel, inv_sel,
+                                           k0, k1)
+                    valid = valid & (ss >= cascade.stage_threshold[s])
+                    per_img = jnp.zeros((batch,), jnp.int32).at[b_sel].add(
+                        valid.astype(jnp.int32))
+                    counts = counts.at[s].add(per_img)
+
+            return BatchResult(
+                img=jnp.where(valid, b_sel, -1),
+                lvl=jnp.where(valid, lvl_sel, -1),
+                ys=jnp.where(valid, y_sel, -1),
+                xs=jnp.where(valid, x_sel, -1),
+                valid=valid, alive_counts=counts, overflow=overflow)
+
+        return jax.jit(batch_fn)
+
+    def _batch_fn(self, hp: int, wp: int, batch: int):
+        key = (hp, wp, batch)
+        if key not in self._batch_fns:
+            self._batch_fns[key] = self._build_batch_fn(hp, wp, batch)
+        return self._batch_fns[key]
+
+    @staticmethod
+    def _pack_stack(imgs: list, hp: int, wp: int):
+        """Zero-pad a list of images into one (B, hp, wp) stack + their
+        true (h, w) shapes — the shared intake of both batch strategies."""
+        stack = np.zeros((len(imgs), hp, wp), np.float32)
+        valid_hw = np.zeros((len(imgs), 2), np.int32)
+        for i, im in enumerate(imgs):
+            h, w = im.shape
+            stack[i, :h, :w] = im
+            valid_hw[i] = (h, w)
+        return jnp.asarray(stack), valid_hw
+
+    def detect_batch_raw(self, images) -> list[tuple[LevelResult, float]]:
+        """vmap path: per-level batched ``LevelResult``s for a same-bucket
+        stack of images (the straightforward `vmap(level_fn)` strategy —
+        batched window lists, per-image overflow accounting, shared per-shape
+        jit cache with the single-image path)."""
+        imgs = [np.asarray(im, np.float32) for im in images]
+        hws = {self._bucket_hw(*im.shape) for im in imgs}
+        if len(hws) != 1:
+            raise ValueError(
+                f"detect_batch_raw needs a single shape bucket, got {hws}")
+        (hp, wp), = hws
+        stack, valid_hw = self._pack_stack(imgs, hp, wp)
+        out = []
+        for lv in pyramid_plan(hp, wp, self.config.scale_factor):
+            ys_idx = downscale_indices(hp, lv.height)
+            xs_idx = downscale_indices(wp, lv.width)
+            img_l = stack[:, ys_idx[:, None], xs_idx[None, :]]
+            lims = np.stack(_window_limits(
+                valid_hw[:, 0], valid_hw[:, 1], lv.height, lv.width,
+                hp, wp), axis=1).astype(np.int32)
+            res = self._vmap_level_fn(lv.height, lv.width, len(imgs))(
+                self.cascade, img_l, jnp.asarray(lims))
+            out.append((res, lv.scale))
+        return out
+
+    def detect_batch(self, images, group: bool = True,
+                     strategy: str = "packed") -> list[np.ndarray]:
+        """Detect faces in many images; returns one (M, 4) rect array per
+        image, bit-identical per image to sequential :meth:`detect`.
+
+        Images are grouped into shape buckets (``EngineConfig.pad_multiple``)
+        and each bucket runs one program per (bucket shape, sub-batch size).
+        ``strategy="packed"`` shares one survivor compaction across the whole
+        batch and pyramid (fast tail); ``strategy="vmap"`` runs per-level
+        vmapped ``LevelResult``s (per-image overflow attribution).
+        """
+        imgs = [np.asarray(im, np.float32) for im in images]
+        out: list = [None] * len(imgs)
+        buckets: dict[tuple[int, int], list[int]] = {}
+        for i, im in enumerate(imgs):
+            buckets.setdefault(self._bucket_hw(*im.shape), []).append(i)
+        for (hp, wp), idxs in buckets.items():
+            if strategy == "packed":
+                per_img_rects = self._detect_bucket_packed(
+                    [imgs[i] for i in idxs], hp, wp)
+            elif strategy == "vmap":
+                per_img_rects = self._detect_bucket_vmap(
+                    [imgs[i] for i in idxs], idxs)
+            else:
+                raise ValueError(f"unknown batch strategy: {strategy!r}")
+            for i, rects in zip(idxs, per_img_rects):
+                out[i] = (nms.group_rectangles(rects,
+                                               self.config.min_neighbors)
+                          if group else rects)
+        return out
+
+    def _detect_bucket_packed(self, imgs: list, hp: int, wp: int) -> list:
+        n = len(imgs)
+        plan = pyramid_plan(hp, wp, self.config.scale_factor)
+        if not plan:  # bucket smaller than the detection window
+            return [np.zeros((0, 4), np.int32) for _ in range(n)]
+        stack, valid_hw = self._pack_stack(imgs, hp, wp)
+        res = self._batch_fn(hp, wp, n)(
+            self.cascade, stack, jnp.asarray(valid_hw))
+        if bool(np.asarray(res.overflow)):
+            raise RuntimeError(
+                "batched-engine shared capacity overflow; raise "
+                "batch_capacity_fracs / capacity_fracs (see "
+                "Detector.calibrated)")
+        scales = np.asarray([lv.scale for lv in plan])
+        val = np.asarray(res.valid)
+        b = np.asarray(res.img)[val]
+        lvl = np.asarray(res.lvl)[val]
+        ys = np.asarray(res.ys)[val]
+        xs = np.asarray(res.xs)[val]
+        out = []
+        for i in range(n):
+            m = b == i
+            out.append(self._decode_rects(ys[m], xs[m], scales[lvl[m]]))
+        return out
+
+    def _detect_bucket_vmap(self, imgs: list, idxs: list) -> list:
+        levels = self.detect_batch_raw(imgs)
+        over = np.zeros(len(imgs), bool)
+        for res, _ in levels:
+            over |= np.asarray(res.overflow)
+        if over.any():
+            bad = [idxs[i] for i in np.nonzero(over)[0]]
+            raise RuntimeError(
+                f"wave-engine capacity overflow on image(s) {bad}; raise "
+                "capacity_fracs (see Detector.calibrated)")
+        out = []
+        for i in range(len(imgs)):
+            rects = []
+            for res, scale in levels:
+                val = np.asarray(res.valid[i])
+                rects.append(self._decode_rects(np.asarray(res.ys[i])[val],
+                                                np.asarray(res.xs[i])[val],
+                                                scale))
+            out.append(np.concatenate(rects, axis=0) if rects
+                       else np.zeros((0, 4), np.int32))
+        return out
+
+    # ---------------------------------------------------------- calibration
+    def calibrated(self, image, safety: float = 2.0) -> "Detector":
+        """Profile-guided detector: run once on ``image`` with the current
+        (conservative) capacities, measure survivors at each compaction
+        boundary, and return a new :class:`Detector` whose
+        ``capacity_fracs`` are the worst-level measured fractions with a
+        ``safety`` multiplier.  The batched engine's shared capacities
+        (``batch_capacity_fracs``) are calibrated from the *summed* survivor
+        counts across levels, which is what turns the packed tail into a
+        real speedup (see ``benchmarks/bench_serving.py``)."""
+        h, w = np.asarray(image).shape
+        _, _, plan = self._padded_plan(h, w)
+        levels = self.detect_raw(image)
+        comp_stages = [s0 for (s0, s1, dense) in self._segments()
+                       if not dense]
+        if not comp_stages:  # dense mode: single final compaction
+            comp_stages = [self.n_stages]
+        fracs = np.zeros(len(comp_stages))          # worst level, per comp
+        surv_tot = np.zeros(len(comp_stages))       # summed over levels
+        win_tot = 0
+        for lv, (res, _scale) in zip(plan, levels):
+            ny = (lv.height - WINDOW) // self.config.step + 1
+            nx = (lv.width - WINDOW) // self.config.step + 1
+            nwin = max(ny * nx, 1)
+            win_tot += nwin
+            cnt = np.asarray(res.alive_counts, np.float64)
+            for k, s0 in enumerate(comp_stages):
+                survivors = cnt[s0 - 1] if s0 > 0 else float(nwin)
+                fracs[k] = max(fracs[k], survivors / nwin)
+                surv_tot[k] += survivors
+        # same safety shaping as calibrate_capacities, on both schedules
+        fracs = calibrate_capacities(fracs, 1, safety)
+        batch_fracs = calibrate_capacities(surv_tot, win_tot, safety)
+        return Detector(self.cascade, self.config._replace(
+            capacity_fracs=fracs, batch_capacity_fracs=batch_fracs))
 
     # ------------------------------------------------------------- analysis
     def work_profile(self, image) -> dict:
@@ -259,7 +732,7 @@ class Detector:
         levels = self.detect_raw(image)
         sizes = self.cascade.stage_sizes().astype(np.int64)
         img = np.asarray(image)
-        plan = pyramid_plan(img.shape[0], img.shape[1], self.config.scale_factor)
+        _, _, plan = self._padded_plan(img.shape[0], img.shape[1])
         total_windows = 0
         weak_early = 0   # ideal per-stage early exit (sequential semantics)
         weak_dense = 0   # delayed rejection

@@ -9,12 +9,14 @@ from __future__ import annotations
 import math
 from typing import NamedTuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from .cascade import WINDOW
 
-__all__ = ["PyramidLevel", "pyramid_plan", "downscale_nearest", "build_pyramid"]
+__all__ = ["PyramidLevel", "pyramid_plan", "downscale_indices",
+           "downscale_nearest", "build_pyramid"]
 
 
 class PyramidLevel(NamedTuple):
@@ -42,11 +44,18 @@ def pyramid_plan(height: int, width: int, scale_factor: float = 1.2,
     return levels
 
 
+def downscale_indices(src: int, dst: int) -> np.ndarray:
+    """Nearest-neighbour source index per destination pixel — the single
+    definition of the resize arithmetic, shared by the single-image resize
+    and the batched engine's gathers (keeps the paths bit-identical)."""
+    return (np.arange(dst) * src) // dst
+
+
 def downscale_nearest(img: jax.Array, out_h: int, out_w: int) -> jax.Array:
     """Nearest-neighbour resize (the reference C code's ``nearestNeighbor``)."""
     h, w = img.shape
-    ys = (jnp.arange(out_h) * h) // out_h
-    xs = (jnp.arange(out_w) * w) // out_w
+    ys = jnp.asarray(downscale_indices(h, out_h))
+    xs = jnp.asarray(downscale_indices(w, out_w))
     return img[ys[:, None], xs[None, :]]
 
 

@@ -15,9 +15,12 @@ synchronization point — exactly the paper's `schedule(static)` pathology
   critical path via :class:`~repro.scheduling.botlev.BotlevScheduler` on a
   pod-level ``Platform``.
 
-The partitioner is consumed by two layers: the cascade detection engine
-(pyramid levels / image shards across pods) and the LM data pipeline
-(per-pod microbatch share, `distributed/fault.py` re-plans on straggle).
+The partitioner is consumed by three layers: the cascade detection engine
+(pyramid levels / image shards across pods), the batched detection serving
+front-end (:class:`repro.serve.detector_service.DetectorService` shards each
+micro-batch flush across pods by measured rates and replans on straggle),
+and the LM data pipeline (per-pod microbatch share, `distributed/fault.py`
+re-plans on straggle).
 """
 
 from __future__ import annotations
@@ -30,7 +33,7 @@ import numpy as np
 from .energy import Platform, CorePowerModel
 
 __all__ = ["HeteroPodPlan", "rate_weighted_split", "mixed_pod_platform",
-           "replan_on_straggle"]
+           "replan_on_straggle", "update_rates_ema"]
 
 
 @dataclass(frozen=True)
@@ -93,6 +96,17 @@ def mixed_pod_platform(pod_specs: Sequence[tuple[str, str, int, float]],
         n_total += n
     return Platform("mixed-pods", tuple(clusters),
                     idle_power=idle_per_chip * n_total)
+
+
+def update_rates_ema(rates: Sequence[float], observed: Sequence[float],
+                     alpha: float = 0.5) -> np.ndarray:
+    """Exponential-moving-average rate tracker for the serving loop: pods
+    with no observation this flush (share 0 / idle) keep their old rate."""
+    rates = np.asarray(rates, np.float64).copy()
+    observed = np.asarray(observed, np.float64)
+    m = observed > 0
+    rates[m] = (1 - alpha) * rates[m] + alpha * observed[m]
+    return rates
 
 
 def replan_on_straggle(plan: HeteroPodPlan, measured_rates: Sequence[float],

@@ -1,0 +1,297 @@
+"""Micro-batching detection front-end over the batched cascade engine.
+
+Request flow (the serving-scale shape of the paper's pipeline)::
+
+    submit(image) -> request queue -> shape buckets -> pod shards
+        -> Detector.detect_batch -> per-request rect decode -> Future
+
+Requests are queued, grouped into shape buckets (``EngineConfig.
+pad_multiple``), chopped into sub-batches from ``batch_sizes`` (so the jit
+cache stays bounded), and each flush's work is split across *pods* by the
+rate-weighted partitioner of :mod:`repro.scheduling.hetero` — the pod-scale
+analogue of the paper's big.LITTLE allocation: fast pods take shares
+proportional to their measured rates, and the plan is revised via
+``replan_on_straggle`` when measured throughput drifts.  On a single host
+the pods are simulated (each pod's wall time is scaled by its nominal
+speed), but the shares, imbalance, and replan decisions are exactly what a
+real asymmetric fleet would execute.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.scheduling.hetero import (HeteroPodPlan, rate_weighted_split,
+                                     replan_on_straggle, update_rates_ema)
+
+__all__ = ["PodSpec", "DetectionRequest", "DetectorService"]
+
+
+@dataclass(frozen=True)
+class PodSpec:
+    """A simulated processor pod (big.LITTLE cluster at fleet scale)."""
+    name: str
+    speed: float = 1.0   # relative nominal throughput (big=1.0, LITTLE<1)
+
+
+@dataclass
+class DetectionRequest:
+    """One queued image + its completion state."""
+    req_id: int
+    image: np.ndarray
+    done: threading.Event = field(default_factory=threading.Event)
+    rects: np.ndarray | None = None
+    error: Exception | None = None
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        if not self.done.wait(timeout):
+            raise TimeoutError(f"request {self.req_id} not finished")
+        if self.error is not None:
+            raise self.error
+        return self.rects
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class DetectorService:
+    """Queue -> bucket -> pod-shard -> ``detect_batch`` micro-batcher.
+
+    Deterministic by default: callers ``submit()`` then ``flush()`` (or use
+    ``detect_many``).  ``start()`` runs a background flusher thread that
+    fires when ``max_batch`` requests are queued or ``max_delay_ms`` passed.
+    """
+
+    def __init__(self, detector, pods: tuple[PodSpec, ...] | None = None,
+                 max_batch: int = 8, batch_sizes: tuple[int, ...] = (1, 2, 4, 8),
+                 max_delay_ms: float = 5.0, strategy: str = "packed",
+                 replan_threshold: float = 0.25, rate_ema: float = 0.5):
+        self.detector = detector
+        self.pods = tuple(pods) if pods else (PodSpec("pod0", 1.0),)
+        self.max_batch = max_batch
+        self.batch_sizes = tuple(sorted(set(batch_sizes)))
+        self.max_delay_ms = max_delay_ms
+        self.strategy = strategy
+        self.replan_threshold = replan_threshold
+        self.rate_ema = rate_ema
+
+        self._lock = threading.Lock()        # queue + accounting state
+        self._flush_lock = threading.Lock()  # serializes whole flushes
+        self._queue: list[DetectionRequest] = []
+        self._next_id = 0
+        self._rates = np.asarray([p.speed for p in self.pods], np.float64)
+        self._pod_shares = np.zeros(len(self.pods), np.int64)
+        self._pod_sim_time = np.zeros(len(self.pods), np.float64)
+        self._latencies: list[float] = []
+        self._n_done = 0
+        self._n_replans = 0
+        self._last_plan: HeteroPodPlan | None = None
+        self._t0: float | None = None       # first submit (throughput clock)
+        self._t_last: float = 0.0
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------- intake
+    def submit(self, image) -> DetectionRequest:
+        req = DetectionRequest(req_id=self._next_id_inc(),
+                               image=np.asarray(image, np.float32),
+                               t_submit=time.perf_counter())
+        with self._lock:
+            if self._t0 is None:
+                self._t0 = req.t_submit
+            self._queue.append(req)
+        return req
+
+    def _next_id_inc(self) -> int:
+        with self._lock:
+            i = self._next_id
+            self._next_id += 1
+        return i
+
+    def detect_many(self, images) -> list[np.ndarray]:
+        """Synchronous convenience: submit all, flush, return in order."""
+        reqs = [self.submit(im) for im in images]
+        self.flush()
+        return [r.result() for r in reqs]
+
+    # ------------------------------------------------------------ warm-up
+    def warmup(self, probe_image, safety: float = 2.0) -> None:
+        """Calibrate engine capacities on a probe image (profile-guided
+        ``capacity_fracs``, the prerequisite for the packed tail's speedup)
+        and measure a baseline per-pod rate."""
+        self.detector = self.detector.calibrated(probe_image, safety)
+        self.detector.detect(probe_image)        # compile
+        t0 = time.perf_counter()
+        self.detector.detect(probe_image)        # measure warm
+
+        per_img = max(time.perf_counter() - t0, 1e-6)
+        base = 1.0 / per_img
+        with self._lock:
+            self._rates = np.asarray([p.speed * base for p in self.pods])
+
+    # -------------------------------------------------------------- flush
+    def flush(self) -> int:
+        """Process every queued request; returns the number completed.
+        Safe to call from the background flusher and callers concurrently:
+        flushes serialize, and a request that fails (even with an
+        unexpected exception) completes with ``error`` set rather than
+        dropping silently or killing the flusher thread."""
+        with self._flush_lock:
+            with self._lock:
+                batch, self._queue = self._queue, []
+            if not batch:
+                return 0
+            plan = self._plan(len(batch))
+            observed = np.zeros(len(self.pods), np.float64)
+            cursor = 0
+            for pi, share in enumerate(plan.shares):
+                shard = batch[cursor:cursor + share]
+                cursor += share
+                if not shard:
+                    continue
+                t0 = time.perf_counter()
+                self._run_shard(shard)
+                wall = max(time.perf_counter() - t0, 1e-9)
+                sim = wall / max(self.pods[pi].speed, 1e-9)
+                with self._lock:
+                    self._pod_shares[pi] += len(shard)
+                    self._pod_sim_time[pi] += sim
+                observed[pi] = len(shard) / sim
+            self._update_rates(observed)
+            return len(batch)
+
+    def _plan(self, n: int) -> HeteroPodPlan:
+        with self._lock:
+            plan = rate_weighted_split(n, self._rates,
+                                       [p.name for p in self.pods])
+            self._last_plan = plan
+        return plan
+
+    def _update_rates(self, observed: np.ndarray) -> None:
+        if not (observed > 0).any():
+            return
+        with self._lock:
+            self._rates = update_rates_ema(self._rates, observed,
+                                           self.rate_ema)
+            new = replan_on_straggle(self._last_plan, self._rates,
+                                     self.replan_threshold) \
+                if self._last_plan is not None else None
+            if new is not None:
+                self._n_replans += 1
+                self._last_plan = new
+
+    def _run_shard(self, shard: list[DetectionRequest]) -> None:
+        for chunk in self._chunks(shard):
+            images = [r.image for r in chunk]
+            try:
+                rects = self.detector.detect_batch(images,
+                                                   strategy=self.strategy)
+            except Exception:                      # noqa: BLE001
+                # overflow (or any pathological input) somewhere in the
+                # batch: isolate per image so one bad request completes
+                # with an error instead of failing its whole flush
+                rects = []
+                for r in chunk:
+                    try:
+                        rects.append(self.detector.detect(r.image))
+                    except Exception as e:         # noqa: BLE001
+                        rects.append(e)
+            for r, out in zip(chunk, rects):
+                r.t_done = time.perf_counter()
+                if isinstance(out, Exception):
+                    r.error = out
+                else:
+                    r.rects = out
+                with self._lock:
+                    self._t_last = r.t_done
+                    self._latencies.append(r.latency_s)
+                    self._n_done += 1
+                r.done.set()
+
+    def _chunks(self, shard: list) -> list[list]:
+        """Chop a shard into sub-batches drawn from ``batch_sizes`` (largest
+        first) so only a bounded set of batch shapes ever compiles."""
+        out, i = [], 0
+        sizes = [b for b in self.batch_sizes if b <= self.max_batch]
+        if not sizes:
+            sizes = [1]
+        while i < len(shard):
+            left = len(shard) - i
+            size = max((b for b in sizes if b <= left), default=sizes[0])
+            out.append(shard[i:i + size])
+            i += size
+        return out
+
+    # ---------------------------------------------------------- threading
+    def start(self) -> None:
+        """Background flusher: fires on ``max_batch`` queued or
+        ``max_delay_ms`` since the oldest queued request."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                with self._lock:
+                    n = len(self._queue)
+                    oldest = self._queue[0].t_submit if n else None
+                due = (n >= self.max_batch
+                       or (oldest is not None and
+                           (time.perf_counter() - oldest) * 1e3
+                           >= self.max_delay_ms))
+                if due:
+                    self.flush()
+                else:
+                    self._stop.wait(self.max_delay_ms / 1e3 / 4)
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        self.flush()
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        with self._lock:
+            lat = np.asarray(self._latencies) * 1e3
+            elapsed = (max(self._t_last - self._t0, 1e-9)
+                       if self._t0 is not None else 1e-9)
+            n_done = self._n_done
+            pod_shares = self._pod_shares.copy()
+            pod_sim = self._pod_sim_time.copy()
+            rates = self._rates.copy()
+            n_replans = self._n_replans
+            last_plan = self._last_plan
+        total_sim = pod_sim.sum()
+        pods = [{
+            "name": p.name, "speed": p.speed,
+            "rate": float(rates[i]),
+            "images": int(pod_shares[i]),
+            "sim_time_s": float(pod_sim[i]),
+        } for i, p in enumerate(self.pods)]
+        return {
+            "n_done": n_done,
+            "imgs_per_s": n_done / elapsed,
+            "latency_ms_p50": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+            "latency_ms_p95": float(np.percentile(lat, 95)) if len(lat) else 0.0,
+            "latency_ms_p99": float(np.percentile(lat, 99)) if len(lat) else 0.0,
+            "pods": pods,
+            "makespan_imbalance": (float(pod_sim.max() /
+                                         (total_sim / len(self.pods)))
+                                   if total_sim > 0 else 1.0),
+            "replans": n_replans,
+            "last_plan": (dict(zip(last_plan.pod_names, last_plan.shares))
+                          if last_plan else {}),
+        }

@@ -1,0 +1,21 @@
+"""Shared test fixtures/builders (importable as ``from helpers import ...``
+since pytest puts each rootless test directory on sys.path)."""
+
+import numpy as np
+
+from repro.core import make_cascade
+
+
+def all_pass_cascade(n_stages: int = 4):
+    """Every window passes every stage — maximal survivor pressure, used to
+    force capacity-overflow paths."""
+    n = n_stages
+    rect_xywh = np.tile(np.asarray([[0, 0, 8, 8], [8, 0, 8, 8], [0, 0, 0, 0]],
+                                   np.int32), (n, 1, 1))
+    rect_w = np.tile(np.asarray([[1.0, -1.0, 0.0]], np.float32), (n, 1))
+    return make_cascade(rect_xywh, rect_w,
+                        np.zeros(n, np.float32),
+                        np.full(n, 1.0, np.float32),
+                        np.full(n, 1.0, np.float32),
+                        np.arange(n + 1, dtype=np.int32),
+                        np.full(n, -1e9, np.float32))

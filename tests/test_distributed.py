@@ -123,8 +123,12 @@ def test_compressed_psum_correct():
         def f(x):
             return compressed_psum(x, "d")
 
-        y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d"),
-                                  out_specs=P("d")))(x)
+        try:
+            shard_map = jax.shard_map
+        except AttributeError:
+            from jax.experimental.shard_map import shard_map
+        y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("d"),
+                              out_specs=P("d")))(x)
         # compressed mean-psum ≈ plain mean over the axis
         want = jnp.broadcast_to(x.reshape(8, 1, 64).mean(0), (8, 1, 64))
         want = want.reshape(8, 64)

@@ -1,0 +1,203 @@
+"""Batched detection engine: per-image bit-identity with sequential
+``detect``, shape bucketing, per-image overflow accounting, and
+profile-guided capacity calibration (+ hypothesis properties for
+wave==dense and batch==single)."""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Detector, EngineConfig, calibrate_capacities,
+                        paper_shaped_cascade)
+from repro.core.cascade import WINDOW
+from repro.core.training.data import render_scene
+
+from helpers import all_pass_cascade
+
+STAGE_SIZES = [3, 4, 5, 6, 8]           # 3 dense-wave stages + 2-stage tail
+CASC = paper_shaped_cascade(0, stage_sizes=STAGE_SIZES)
+KW = dict(step=2, scale_factor=1.3, min_neighbors=2)
+
+
+@pytest.fixture(scope="module")
+def det():
+    return Detector(CASC, EngineConfig(mode="wave", **KW))
+
+
+@pytest.fixture(scope="module")
+def images():
+    rng = np.random.default_rng(7)
+    return [render_scene(rng, 64, 64, n_faces=1)[0] for _ in range(4)]
+
+
+# --------------------------------------------------------------- identity
+@pytest.mark.parametrize("strategy", ["packed", "vmap"])
+def test_detect_batch_matches_detect(det, images, strategy):
+    singles = [det.detect(im) for im in images]
+    batched = det.detect_batch(images, strategy=strategy)
+    assert len(batched) == len(images)
+    for s, b in zip(singles, batched):
+        assert np.array_equal(s, b)
+
+
+@pytest.mark.parametrize("strategy", ["packed", "vmap"])
+def test_detect_batch_ungrouped_matches(det, images, strategy):
+    singles = [det.detect(im, group=False) for im in images]
+    batched = det.detect_batch(images, group=False, strategy=strategy)
+    for s, b in zip(singles, batched):
+        assert np.array_equal(s, b)
+
+
+def test_detect_batch_dense_mode_matches(images):
+    d = Detector(CASC, EngineConfig(mode="dense", **KW))
+    singles = [d.detect(im) for im in images]
+    for strategy in ("packed", "vmap"):
+        for s, b in zip(singles, d.detect_batch(images, strategy=strategy)):
+            assert np.array_equal(s, b)
+
+
+def test_mixed_shapes_pad_bucketing():
+    d = Detector(CASC, EngineConfig(mode="wave", pad_multiple=32, **KW))
+    rng = np.random.default_rng(11)
+    shapes = [(64, 64), (70, 90), (100, 60), (64, 64)]
+    imgs = [render_scene(rng, h, w, n_faces=1)[0] for h, w in shapes]
+    # bucketing collapses 4 shapes into 3 buckets; (64,64) pairs share one
+    buckets = {d._bucket_hw(*im.shape) for im in imgs}
+    assert buckets == {(64, 64), (96, 96), (128, 64)}
+    singles = [d.detect(im) for im in imgs]
+    for strategy in ("packed", "vmap"):
+        for s, b in zip(singles, d.detect_batch(imgs, strategy=strategy)):
+            assert np.array_equal(s, b)
+
+
+def test_padding_never_adds_detections(det):
+    """A padded image must yield exactly the unpadded detections (the
+    window-limit mask excludes any window sampling padded pixels)."""
+    rng = np.random.default_rng(5)
+    img = render_scene(rng, 64, 64, n_faces=1)[0]
+    d_pad = Detector(CASC, EngineConfig(mode="wave", pad_multiple=64, **KW))
+    base = d_pad.detect(img, group=False)
+    # exact-shape detector on the same image: identical window set
+    exact = det.detect(img, group=False)
+    assert np.array_equal(base, exact)
+
+
+# --------------------------------------------------------------- overflow
+def test_overflow_raises_single():
+    casc = all_pass_cascade()
+    d = Detector(casc, EngineConfig(mode="wave", step=1, scale_factor=2.0,
+                                    capacity_fracs=(0.01,)))
+    img = np.zeros((96, 96), np.float32)
+    with pytest.raises(RuntimeError, match="overflow"):
+        d.detect(img)
+
+
+def test_overflow_packed_batch_raises():
+    casc = all_pass_cascade()
+    d = Detector(casc, EngineConfig(mode="wave", step=1, scale_factor=2.0,
+                                    batch_capacity_fracs=(0.01,)))
+    imgs = [np.zeros((96, 96), np.float32)] * 2
+    with pytest.raises(RuntimeError, match="shared capacity overflow"):
+        d.detect_batch(imgs, strategy="packed")
+
+
+def test_overflow_vmap_batch_names_images():
+    casc = all_pass_cascade()
+    d = Detector(casc, EngineConfig(mode="wave", step=1, scale_factor=2.0,
+                                    capacity_fracs=(0.01,)))
+    imgs = [np.zeros((96, 96), np.float32)] * 2
+    with pytest.raises(RuntimeError, match=r"image\(s\) \[0, 1\]"):
+        d.detect_batch(imgs, strategy="vmap")
+
+
+def test_no_overflow_under_auto_capacities(det, images):
+    for res, _ in det.detect_raw(images[0]):
+        assert not bool(np.asarray(res.overflow))
+
+
+# ------------------------------------------------------------ calibration
+def test_calibrate_capacities_roundtrip(det, images):
+    img = images[0]
+    base = det.detect(img)
+    cal = det.calibrated(img, safety=2.0)
+    assert cal.config.capacity_fracs          # profile-guided fracs set
+    # calibrated detector never overflows on the profiled image...
+    for res, _ in cal.detect_raw(img):
+        assert not bool(np.asarray(res.overflow))
+    # ...and detections are unchanged (capacities only bound lane counts)
+    assert np.array_equal(cal.detect(img), base)
+    # the shared batched capacity derived from fracs[0] holds too
+    for s, b in zip([cal.detect(im) for im in images],
+                    cal.detect_batch(images, strategy="packed")):
+        assert np.array_equal(s, b)
+
+
+def test_calibrate_capacities_function():
+    fr = calibrate_capacities(np.asarray([500, 120, 30]), 1000, safety=2.0)
+    assert len(fr) == 3
+    assert fr[0] == 1.0                       # clamped at 1
+    assert abs(fr[1] - (0.12 * 2 + 1e-3)) < 1e-9
+    assert all(0 < f <= 1 for f in fr)
+
+
+# ---------------------------------------------------- batched LevelResult
+def test_detect_batch_raw_levelresults(det, images):
+    levels = det.detect_batch_raw(images[:2])
+    assert levels, "no pyramid levels"
+    single = det.detect_raw(images[0])
+    assert len(levels) == len(single)
+    for (bres, bscale), (sres, sscale) in zip(levels, single):
+        assert bscale == sscale
+        assert bres.ys.shape[0] == 2          # leading batch axis
+        assert bres.overflow.shape == (2,)    # per-image overflow accounting
+        assert np.array_equal(np.asarray(bres.ys[0]), np.asarray(sres.ys))
+        assert np.array_equal(np.asarray(bres.alive_counts[0]),
+                              np.asarray(sres.alive_counts))
+
+
+# ------------------------------------------------------------- properties
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_wave_equals_dense(seed):
+    """Delayed rejection (dense) and wave compaction must keep exactly the
+    same surviving windows for random images — the paper's §7.1 equivalence."""
+    rng = np.random.default_rng(seed)
+    img = rng.uniform(0, 255, (48, 48)).astype(np.float32)
+    kw = dict(step=2, scale_factor=1.4, min_neighbors=2)
+    wave = Detector(CASC, EngineConfig(mode="wave", **kw))
+    dense = Detector(CASC, EngineConfig(mode="dense", **kw))
+    assert np.array_equal(wave.detect(img, group=False),
+                          dense.detect(img, group=False))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n_faces=st.integers(0, 2))
+def test_property_batch_of_one_matches_single(det, seed, n_faces):
+    rng = np.random.default_rng(seed)
+    img = render_scene(rng, 64, 64, n_faces=n_faces)[0]
+    single = det.detect(img)
+    for strategy in ("packed", "vmap"):
+        (batched,) = det.detect_batch([img], strategy=strategy)
+        assert np.array_equal(single, batched)
+
+
+def test_sub_window_images_yield_empty(det):
+    """Images smaller than the 24x24 window have no pyramid levels: both
+    paths must return empty rect arrays, not crash."""
+    tiny = np.zeros((10, 10), np.float32)
+    assert det.detect(tiny).shape == (0, 4)
+    for strategy in ("packed", "vmap"):
+        (out,) = det.detect_batch([tiny], strategy=strategy)
+        assert out.shape == (0, 4)
+    assert det.detect_batch([]) == []
+
+
+def test_window_limits_formula():
+    from repro.core.engine import _window_limits
+    # unpadded: limits admit every window origin on the level grid
+    y_lim, x_lim = _window_limits(64, 64, 64, 64, 64, 64)
+    assert y_lim == 64 - WINDOW and x_lim == 64 - WINDOW
+    # fully padded image half: windows must stop before the pad boundary
+    y_lim, _ = _window_limits(32, 64, 64, 64, 64, 64)
+    assert y_lim == 32 - WINDOW

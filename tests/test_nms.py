@@ -1,0 +1,105 @@
+"""Regression tests for detection grouping: golden clusters, min_neighbors
+edge cases at 0/1, transitive chaining, and the batched variant's exact
+equivalence to per-image grouping."""
+
+import numpy as np
+import pytest
+
+from repro.core import group_rectangles, group_rectangles_batch
+
+# Golden fixture: two real clusters + one outlier.
+CLUSTER_A = np.asarray([
+    [10, 10, 20, 20],
+    [11, 10, 20, 20],
+    [10, 12, 20, 20],
+    [12, 11, 20, 20],
+])
+CLUSTER_B = np.asarray([
+    [50, 50, 24, 24],
+    [51, 52, 24, 24],
+    [49, 50, 24, 24],
+])
+OUTLIER = np.asarray([[100, 100, 10, 10]])
+RECTS = np.concatenate([CLUSTER_A, CLUSTER_B, OUTLIER])
+
+
+def test_golden_clusters_min_neighbors_3():
+    got = group_rectangles(RECTS, min_neighbors=3)
+    want = np.rint(np.stack([CLUSTER_A.mean(axis=0).astype(np.float64),
+                             CLUSTER_B.mean(axis=0).astype(np.float64)])
+                   ).astype(np.int32)
+    assert np.array_equal(got, want)
+
+
+def test_min_neighbors_4_drops_small_cluster():
+    got = group_rectangles(RECTS, min_neighbors=4)
+    want = np.rint(CLUSTER_A.mean(axis=0)).astype(np.int32)[None]
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("mn", [0, 1])
+def test_min_neighbors_edge_keeps_everything(mn):
+    """mn=0 keeps all clusters incl. singletons; mn=1 keeps size>=1, i.e.
+    also everything — the documented OpenCV-mirroring edge semantics."""
+    got = group_rectangles(RECTS, min_neighbors=mn)
+    assert len(got) == 3                     # A, B, and the outlier cluster
+    assert np.rint(OUTLIER[0]).astype(np.int32).tolist() in got.tolist()
+
+
+def test_empty_input():
+    got = group_rectangles(np.zeros((0, 4)), min_neighbors=3)
+    assert got.shape == (0, 4) and got.dtype == np.int32
+
+
+def test_transitive_chaining_forms_one_cluster():
+    """a~b and b~c but a!~c still union into a single cluster."""
+    chain = np.asarray([[0, 0, 20, 20], [4, 0, 20, 20], [8, 0, 20, 20]])
+    got = group_rectangles(chain, min_neighbors=3)
+    assert len(got) == 1
+    assert np.array_equal(got[0], np.rint(chain.mean(axis=0)).astype(np.int32))
+
+
+# ------------------------------------------------------------------ batched
+def test_batched_matches_per_image_golden():
+    rects = np.concatenate([RECTS, RECTS + 3])
+    batch_idx = np.concatenate([np.zeros(len(RECTS), int),
+                                np.ones(len(RECTS), int)])
+    got = group_rectangles_batch(rects, batch_idx, min_neighbors=3)
+    assert len(got) == 2
+    for b in range(2):
+        want = group_rectangles(rects[batch_idx == b], min_neighbors=3)
+        assert np.array_equal(got[b], want)
+
+
+@pytest.mark.parametrize("mn", [0, 1, 2, 3])
+def test_batched_matches_per_image_random(mn):
+    rng = np.random.default_rng(42)
+    n, n_batches = 60, 4
+    rects = np.stack([rng.integers(0, 80, n), rng.integers(0, 80, n),
+                      rng.integers(10, 30, n), rng.integers(10, 30, n)],
+                     axis=1)
+    batch_idx = rng.integers(0, n_batches, n)
+    got = group_rectangles_batch(rects, batch_idx, n_batches=n_batches,
+                                 min_neighbors=mn)
+    assert len(got) == n_batches
+    for b in range(n_batches):
+        want = group_rectangles(rects[batch_idx == b], min_neighbors=mn)
+        assert np.array_equal(got[b], want)
+
+
+def test_batched_never_merges_across_images():
+    """Identical rects on different images must stay separate clusters."""
+    rects = np.concatenate([CLUSTER_A, CLUSTER_A])
+    batch_idx = np.concatenate([np.zeros(4, int), np.ones(4, int)])
+    got = group_rectangles_batch(rects, batch_idx, min_neighbors=3)
+    for b in range(2):
+        assert len(got[b]) == 1
+        assert np.array_equal(got[b][0],
+                              np.rint(CLUSTER_A.mean(axis=0)).astype(np.int32))
+
+
+def test_batched_empty():
+    got = group_rectangles_batch(np.zeros((0, 4)), np.zeros(0, int),
+                                 n_batches=3)
+    assert len(got) == 3
+    assert all(g.shape == (0, 4) for g in got)
