@@ -33,7 +33,7 @@ def run(h: int = 480, w: int = 640, fast: bool = False) -> list[dict]:
     add("odroid par botlev (4+4 @2.0/1.4)", odroid_xu4(), BotlevScheduler())
     opt = add("odroid botlev DVFS big@1.5", odroid_xu4(f_big=1.5),
               BotlevScheduler())
-    seq_r = add("rpi seq", rpi3b(), SequentialScheduler())
+    add("rpi seq", rpi3b(), SequentialScheduler())
     par_r = add("rpi par fifo (4)", rpi3b(), FIFOScheduler())
     rows.append({"config": "— odroid optimal vs odroid seq (paper ≈ −22.3 %)",
                  "makespan_s": "-", "avg_power_W": "-",

@@ -7,8 +7,6 @@ classifier evaluation must dominate, variance second, integral small."""
 
 from __future__ import annotations
 
-import numpy as np
-
 from .common import save_rows, print_table, pretrained_cascade, corpus
 
 
@@ -27,7 +25,6 @@ def run(hw: int = 128, fast: bool = False) -> list[dict]:
 
     weak = float(prof["weak_evals_early_exit"])
     windows = float(prof["total_windows"])
-    pix = sum(l["windows"] for l in prof["per_level"])  # ≈ pixel count proxy
     npix = float(hw * hw * 1.45)                        # pyramid sum ≈ 1.45×
     work = {
         "evalWeakClassifier": weak,

@@ -36,8 +36,6 @@ def run(n_images: int = 6, hw: int = 128, fast: bool = False) -> list[dict]:
         iv = float(integral_value(img))
         sizes = casc.stage_sizes()
         # modeled Odroid sequential seconds via the calibrated DES
-        alive = np.concatenate([l["alive_counts"] for l in
-                                prof["per_level"]]).astype(float)
         wm = WorkModel.from_profile(
             sizes, prof["per_level"][0]["alive_counts"],
             prof["per_level"][0]["windows"])

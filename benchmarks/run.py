@@ -20,6 +20,7 @@ BENCHES = [
     ("bench_dvfs", "Figs 21–24 + Table I — DVFS grid + optimum"),
     ("bench_detector", "Tables II/III — ours vs dense reference"),
     ("bench_serving", "batched detection serving: throughput + latency"),
+    ("bench_video", "streaming video: tile-reuse vs per-frame detection"),
     ("bench_roofline", "roofline table from dry-run artifacts"),
 ]
 

@@ -13,4 +13,10 @@ python -m pytest -x -q
 echo "=== smoke: bench_detector (ref/dense vs ours, fast) ==="
 python -m benchmarks.run --fast --only bench_detector
 
+echo "=== smoke: bench_rit (content/RIT relation, fast) ==="
+python -m benchmarks.run --fast --only bench_rit
+
+echo "=== smoke: bench_video (streaming tile-reuse, fast) ==="
+python -m benchmarks.run --fast --only bench_video
+
 echo "CI OK"

@@ -2,7 +2,6 @@
 artifacts (artifacts/dryrun_*.json).  Prints markdown to stdout."""
 
 import json
-import sys
 
 ART = {"16x16": "artifacts/dryrun_16x16.json",
        "pod2x16x16": "artifacts/dryrun_pod2.json"}

@@ -1,9 +1,9 @@
 """Train the shipped pretrained cascade (stronger config, background run)."""
+import os
 import sys
-sys.path.insert(0, "/root/repo/src")
-import numpy as np
-from repro.core.training import train_cascade, TrainConfig
-from repro.core import save_cascade
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.core.training import train_cascade, TrainConfig  # noqa: E402
+from repro.core import save_cascade                         # noqa: E402
 
 cfg = TrainConfig(n_stages=14, n_pos=1200, n_neg=1200, max_features=3500,
                   max_weak_per_stage=60, stage_fpr=0.4, stage_dr=0.997,

@@ -8,7 +8,7 @@ All fields are static hashables so configs can key jit caches.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 __all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "RGLRUConfig",

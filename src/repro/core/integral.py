@@ -16,8 +16,19 @@ pixel units; rectangle *differences* used by 24x24-window Haar features are
 self-consistent with the training pipeline (which uses the same arithmetic),
 so this loss does not affect detection.  The squared integral image reaches
 ~6.8e10 where the f32 ulp is ~4096; window variance over 24x24 windows is
-O(1e7), so ``window_variance`` uses a mean-centred formulation to keep the
+O(1e7), so ``window_variance`` uses a centred formulation to keep the
 relative error of sigma below 1e-4 (see ``window_inv_sigma``).
+
+The centring constant is *fixed* (``CENTRE = 128``, mid-range of uint8
+imagery) rather than the per-image mean: a content-dependent centre makes
+every window's normalization float-coupled to every pixel of the image,
+which breaks window-locality — the property the streaming engine
+(:mod:`repro.stream`) relies on to reuse cached per-window decisions for
+unchanged tiles across frames.  With a fixed centre, a window's stage sums
+are a pure function of the pixels under the window, so identical pixels
+give bit-identical decisions in any frame, batch, or padding context.  The
+cancellation-error argument is unchanged: pixels lie in [0, 255], so
+|x - 128| <= 128 bounds the squared table the same way mean-centring does.
 """
 
 from __future__ import annotations
@@ -31,7 +42,13 @@ __all__ = [
     "rect_sum",
     "window_inv_sigma",
     "integral_value",
+    "CENTRE",
 ]
+
+# fixed centring constant of the squared/centred SATs (see module docstring):
+# content-independent so window normalization is window-local, which is what
+# lets repro.stream reuse cached per-window results across video frames.
+CENTRE = 128.0
 
 
 def integral_image(img: jax.Array) -> jax.Array:
@@ -44,13 +61,13 @@ def integral_image(img: jax.Array) -> jax.Array:
 def integral_images(img: jax.Array) -> tuple[jax.Array, jax.Array]:
     """(integral, squared-integral) of a grayscale image.
 
-    The squared integral is computed over the *mean-centred* image to keep
-    float32 cancellation error small (see module docstring); the constant
-    shift cancels in the variance identity used by :func:`window_inv_sigma`.
+    The squared integral is computed over the *centred* image (fixed
+    ``CENTRE`` shift) to keep float32 cancellation error small (see module
+    docstring); the constant shift cancels in the variance identity used by
+    :func:`window_inv_sigma`.
     """
     img = img.astype(jnp.float32)
-    mu = jnp.mean(img)
-    centred = img - mu
+    centred = img - CENTRE
     ii = integral_image(img)
     ii2 = integral_image(centred * centred)
     # Also need the centred first-moment table to reconstruct the window

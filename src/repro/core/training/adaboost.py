@@ -29,7 +29,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..cascade import Cascade, WINDOW, MAX_RECTS, make_cascade
+from ..cascade import WINDOW, MAX_RECTS, make_cascade
 from .data import window_dataset, sample_negative
 
 __all__ = ["TrainConfig", "train_cascade", "feature_pool", "feature_values"]
@@ -283,7 +283,6 @@ def train_cascade(cfg: TrainConfig = TrainConfig()):
             if cfg.verbose:
                 print(f"stage {s}: not enough hard negatives — stop early")
             break
-        windows = np.concatenate([pos_windows, cur_neg])
         y = np.concatenate([np.ones(len(pos_windows), np.int32),
                             np.zeros(len(cur_neg), np.int32)])
         neg_vals = feature_values(cur_neg, rect_xywh, rect_w)

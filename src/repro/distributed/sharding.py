@@ -16,7 +16,7 @@ GSPMD pads — the roofline table prices that waste and the perf log
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

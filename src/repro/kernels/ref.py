@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.cascade import Cascade, WINDOW
+from repro.core.cascade import WINDOW
 from repro.core.integral import rect_sum
 
 _AREA = float(WINDOW * WINDOW)

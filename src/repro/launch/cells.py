@@ -18,7 +18,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, SHAPES, ShapeSpec
 from repro.configs.base import ModelConfig

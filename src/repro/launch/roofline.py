@@ -23,9 +23,6 @@ Sources & caveats (measured on this jax/XLA build):
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass
-
-import numpy as np
 
 from repro.configs import get_config, SHAPES
 from repro.configs.base import ModelConfig, ShapeSpec

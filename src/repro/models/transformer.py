@@ -17,10 +17,6 @@ One ``Model`` covers all ten assigned architectures:
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -33,7 +29,7 @@ from . import moe as moe_mod
 from . import rglru as rglru_mod
 from . import ssd as ssd_mod
 from .layers import init_norm, apply_norm, init_gated_mlp, gated_mlp, \
-    init_dense, dense
+    init_dense
 
 __all__ = ["Model", "build_model", "param_count"]
 

@@ -19,9 +19,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Sequence
 
-import numpy as np
-
-from .dag import TaskDAG, build_detection_dag, WorkModel
+from .dag import build_detection_dag, WorkModel
 from .energy import Platform, odroid_xu4, EXYNOS_BIG_FREQS
 from .botlev import BotlevScheduler
 from .executor import simulate, SimResult

@@ -1,4 +1,4 @@
 from .serve_step import (make_prefill_step, make_decode_step,  # noqa: F401
                          make_cascade_decode_step, generate)
 from .detector_service import (DetectorService, DetectionRequest,  # noqa: F401
-                               PodSpec)
+                               FrameRequest, StreamSession, PodSpec)

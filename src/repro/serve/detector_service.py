@@ -15,6 +15,21 @@ proportional to their measured rates, and the plan is revised via
 the pods are simulated (each pod's wall time is scaled by its nominal
 speed), but the shares, imbalance, and replan decisions are exactly what a
 real asymmetric fleet would execute.
+
+Stream sessions (video workload)
+--------------------------------
+``open_stream()`` adds stateful video sessions alongside one-shot requests:
+each session owns a :class:`repro.stream.VideoDetector` (temporal tile-reuse
+cache), and ``submit_frame`` enqueues frames into the same queue.  A flush
+processes streams in per-session-ordered *rounds* sharded across pods like
+any other work; within a round the changed-tile work items of concurrent
+sessions are funneled through the shared packed incremental engine (one
+compaction for every stream's changed windows), and sessions that need a
+full refresh (first frame, keyframe, over-budget change) are batched
+through ``Detector.detect_batch_raw``.  This is the content-dependent,
+variable-size task stream the asymmetric-scheduling literature targets:
+mostly-static streams produce tiny work items, busy streams produce big
+ones, and the rate-weighted split keeps the pods balanced either way.
 """
 
 from __future__ import annotations
@@ -27,8 +42,11 @@ import numpy as np
 
 from repro.scheduling.hetero import (HeteroPodPlan, rate_weighted_split,
                                      replan_on_straggle, update_rates_ema)
+from repro.stream import (StreamConfig, StreamEngine, VideoDetector,
+                          level_windows_from_raw)
 
-__all__ = ["PodSpec", "DetectionRequest", "DetectorService"]
+__all__ = ["PodSpec", "DetectionRequest", "FrameRequest", "StreamSession",
+           "DetectorService"]
 
 
 @dataclass(frozen=True)
@@ -61,6 +79,59 @@ class DetectionRequest:
         return self.t_done - self.t_submit
 
 
+@dataclass
+class FrameRequest:
+    """One queued video frame of a stream session."""
+    req_id: int
+    session: "StreamSession"
+    frame: np.ndarray
+    done: threading.Event = field(default_factory=threading.Event)
+    rects: np.ndarray | None = None
+    stats: object | None = None          # repro.stream.FrameStats
+    error: Exception | None = None
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        if not self.done.wait(timeout):
+            raise TimeoutError(f"frame request {self.req_id} not finished")
+        if self.error is not None:
+            raise self.error
+        return self.rects
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class StreamSession:
+    """A video stream's handle on the service: ordered frame futures over
+    one :class:`repro.stream.VideoDetector` (opened via ``open_stream``)."""
+
+    def __init__(self, service: "DetectorService", stream_id: int,
+                 config: StreamConfig):
+        self.service = service
+        self.stream_id = stream_id
+        self.video = VideoDetector(service.detector, config,
+                                   engine=service.stream_engine)
+        self.closed = False
+
+    def submit_frame(self, frame) -> FrameRequest:
+        if self.closed:
+            raise RuntimeError(f"stream {self.stream_id} is closed")
+        return self.service._submit_frame(self, frame)
+
+    def detect_frames(self, frames) -> list[np.ndarray]:
+        """Synchronous convenience: submit all frames, flush, gather."""
+        reqs = [self.submit_frame(f) for f in frames]
+        self.service.flush()
+        return [r.result() for r in reqs]
+
+    def close(self) -> None:
+        self.closed = True
+        self.service._close_stream(self)
+
+
 class DetectorService:
     """Queue -> bucket -> pod-shard -> ``detect_batch`` micro-batcher.
 
@@ -72,7 +143,8 @@ class DetectorService:
     def __init__(self, detector, pods: tuple[PodSpec, ...] | None = None,
                  max_batch: int = 8, batch_sizes: tuple[int, ...] = (1, 2, 4, 8),
                  max_delay_ms: float = 5.0, strategy: str = "packed",
-                 replan_threshold: float = 0.25, rate_ema: float = 0.5):
+                 replan_threshold: float = 0.25, rate_ema: float = 0.5,
+                 stream_config: StreamConfig = StreamConfig()):
         self.detector = detector
         self.pods = tuple(pods) if pods else (PodSpec("pod0", 1.0),)
         self.max_batch = max_batch
@@ -81,10 +153,18 @@ class DetectorService:
         self.strategy = strategy
         self.replan_threshold = replan_threshold
         self.rate_ema = rate_ema
+        self.stream_config = stream_config
+        self._stream_engine: StreamEngine | None = None
+        self._streams: dict[int, StreamSession] = {}
+        self._next_stream_id = 0
+        self._frame_modes = {"full": 0, "incremental": 0, "cached": 0}
+        self._frames_done = 0
+        self._windows_skipped = 0
+        self._windows_total = 0
 
         self._lock = threading.Lock()        # queue + accounting state
         self._flush_lock = threading.Lock()  # serializes whole flushes
-        self._queue: list[DetectionRequest] = []
+        self._queue: list[DetectionRequest | FrameRequest] = []
         self._next_id = 0
         self._rates = np.asarray([p.speed for p in self.pods], np.float64)
         self._pod_shares = np.zeros(len(self.pods), np.int64)
@@ -121,6 +201,48 @@ class DetectorService:
         self.flush()
         return [r.result() for r in reqs]
 
+    # ------------------------------------------------------------- streams
+    @property
+    def stream_engine(self) -> StreamEngine:
+        """Shared packed incremental engine: every session's changed-tile
+        work items go through its one compaction per flush."""
+        with self._lock:
+            if self._stream_engine is None:
+                self._stream_engine = StreamEngine(
+                    self.detector, self.stream_config.max_changed_frac)
+            return self._stream_engine
+
+    def open_stream(self, config: StreamConfig | None = None) -> StreamSession:
+        """Open a video stream session.  Open streams *after* ``warmup()``
+        — warmup swaps in a calibrated detector, and sessions bind the
+        detector (and shared stream engine) at open time.
+
+        ``config`` tunes the session's tile/threshold/keyframe policy; the
+        incremental *budget* (``max_changed_frac``) is a property of the
+        shared engine and always comes from the service-level
+        ``stream_config`` (a per-session value here is ignored)."""
+        with self._lock:
+            sid = self._next_stream_id
+            self._next_stream_id += 1
+        sess = StreamSession(self, sid, config or self.stream_config)
+        with self._lock:
+            self._streams[sid] = sess
+        return sess
+
+    def _close_stream(self, sess: StreamSession) -> None:
+        with self._lock:
+            self._streams.pop(sess.stream_id, None)
+
+    def _submit_frame(self, sess: StreamSession, frame) -> FrameRequest:
+        req = FrameRequest(req_id=self._next_id_inc(), session=sess,
+                           frame=np.asarray(frame, np.float32),
+                           t_submit=time.perf_counter())
+        with self._lock:
+            if self._t0 is None:
+                self._t0 = req.t_submit
+            self._queue.append(req)
+        return req
+
     # ------------------------------------------------------------ warm-up
     def warmup(self, probe_image, safety: float = 2.0) -> None:
         """Calibrate engine capacities on a probe image (profile-guided
@@ -142,30 +264,52 @@ class DetectorService:
         Safe to call from the background flusher and callers concurrently:
         flushes serialize, and a request that fails (even with an
         unexpected exception) completes with ``error`` set rather than
-        dropping silently or killing the flusher thread."""
+        dropping silently or killing the flusher thread.
+
+        One-shot images shard across pods directly.  Stream frames are
+        processed in *rounds* of one frame per session (preserving each
+        session's frame order), each round sharded across pods at session
+        granularity."""
         with self._flush_lock:
             with self._lock:
                 batch, self._queue = self._queue, []
             if not batch:
                 return 0
-            plan = self._plan(len(batch))
-            observed = np.zeros(len(self.pods), np.float64)
-            cursor = 0
-            for pi, share in enumerate(plan.shares):
-                shard = batch[cursor:cursor + share]
-                cursor += share
-                if not shard:
-                    continue
-                t0 = time.perf_counter()
-                self._run_shard(shard)
-                wall = max(time.perf_counter() - t0, 1e-9)
-                sim = wall / max(self.pods[pi].speed, 1e-9)
-                with self._lock:
-                    self._pod_shares[pi] += len(shard)
-                    self._pod_sim_time[pi] += sim
-                observed[pi] = len(shard) / sim
-            self._update_rates(observed)
+            images = [r for r in batch if isinstance(r, DetectionRequest)]
+            frames = [r for r in batch if isinstance(r, FrameRequest)]
+            if images:
+                self._shard_across_pods(images, self._run_shard)
+            while frames:
+                round_, rest, seen = [], [], set()
+                for fr in frames:
+                    if fr.session.stream_id in seen:
+                        rest.append(fr)
+                    else:
+                        seen.add(fr.session.stream_id)
+                        round_.append(fr)
+                frames = rest
+                self._shard_across_pods(round_, self._run_stream_shard)
             return len(batch)
+
+    def _shard_across_pods(self, items: list, run_fn) -> None:
+        """Rate-weighted pod loop shared by one-shot and stream work."""
+        plan = self._plan(len(items))
+        observed = np.zeros(len(self.pods), np.float64)
+        cursor = 0
+        for pi, share in enumerate(plan.shares):
+            shard = items[cursor:cursor + share]
+            cursor += share
+            if not shard:
+                continue
+            t0 = time.perf_counter()
+            run_fn(shard)
+            wall = max(time.perf_counter() - t0, 1e-9)
+            sim = wall / max(self.pods[pi].speed, 1e-9)
+            with self._lock:
+                self._pod_shares[pi] += len(shard)
+                self._pod_sim_time[pi] += sim
+            observed[pi] = len(shard) / sim
+        self._update_rates(observed)
 
     def _plan(self, n: int) -> HeteroPodPlan:
         with self._lock:
@@ -204,16 +348,106 @@ class DetectorService:
                     except Exception as e:         # noqa: BLE001
                         rects.append(e)
             for r, out in zip(chunk, rects):
-                r.t_done = time.perf_counter()
-                if isinstance(out, Exception):
-                    r.error = out
-                else:
-                    r.rects = out
-                with self._lock:
-                    self._t_last = r.t_done
-                    self._latencies.append(r.latency_s)
-                    self._n_done += 1
-                r.done.set()
+                self._complete(r, out)
+
+    def _complete(self, req, out, stats=None) -> None:
+        """Finish one request/frame with rects or an Exception."""
+        req.t_done = time.perf_counter()
+        if isinstance(out, Exception):
+            req.error = out
+        else:
+            req.rects = out
+        if isinstance(req, FrameRequest):
+            req.stats = stats
+        with self._lock:
+            self._t_last = req.t_done
+            self._latencies.append(req.latency_s)
+            self._n_done += 1
+            if isinstance(req, FrameRequest):
+                self._frames_done += 1
+                if stats is not None:
+                    self._frame_modes[stats.mode] += 1
+                    self._windows_total += stats.windows_total
+                    self._windows_skipped += (stats.windows_total
+                                              - stats.windows_recomputed)
+        req.done.set()
+
+    # ---------------------------------------------------------- stream run
+    def _run_stream_shard(self, shard: list[FrameRequest]) -> None:
+        """Process one round of frames (<= 1 per session).
+
+        Plans every session's frame, then batches the work *across*
+        sessions: incremental frames share the packed engine's compaction
+        (grouped by shape bucket, chopped to ``batch_sizes``), and frames
+        needing a full refresh go through ``detect_batch_raw`` together.
+        Any failure or overflow degrades per frame, never the whole round.
+        """
+        incr: list[tuple[FrameRequest, np.ndarray, object]] = []
+        full: list[tuple[FrameRequest, np.ndarray]] = []
+        for fr in shard:
+            try:
+                frame, plan = fr.session.video.plan_frame(fr.frame)
+            except Exception as e:             # noqa: BLE001
+                self._complete(fr, e)
+                continue
+            if plan.mode == "cached":
+                rects, stats = fr.session.video.commit_cached(frame, plan)
+                self._complete(fr, rects, stats)
+            elif plan.mode == "full":
+                full.append((fr, frame))
+            else:
+                incr.append((fr, frame, plan))
+
+        # ---- changed-tile work items, all sessions -> shared compaction
+        buckets: dict[tuple[int, int], list] = {}
+        for item in incr:
+            buckets.setdefault(item[0].session.video.bucket_hw,
+                               []).append(item)
+        for (hp, wp), items in buckets.items():
+            for chunk in self._chunks(items):
+                frames = [frame for (_fr, frame, _plan) in chunk]
+                masks = [plan.masks for (_fr, _frame, plan) in chunk]
+                try:
+                    bitmaps, _rec, overflow = self.stream_engine.incremental(
+                        frames, masks, hp, wp)
+                except Exception as e:         # noqa: BLE001
+                    for fr, _frame, _plan in chunk:
+                        self._complete(fr, e)
+                    continue
+                if overflow:   # shared capacity blown: full-refresh chunk
+                    full.extend((fr, frame) for (fr, frame, _plan) in chunk)
+                    continue
+                for (fr, frame, plan), bm in zip(chunk, bitmaps):
+                    rects, stats = fr.session.video.commit_incremental(
+                        frame, plan, bm)
+                    self._complete(fr, rects, stats)
+
+        # ---- keyframes / refreshes, batched through the raw batch path
+        buckets = {}
+        for fr, frame in full:
+            buckets.setdefault(fr.session.video.bucket_hw,
+                               []).append((fr, frame))
+        for _hw, items in buckets.items():
+            for chunk in self._chunks(items):
+                self._run_full_chunk(chunk)
+
+    def _run_full_chunk(self, chunk: list[tuple[FrameRequest, np.ndarray]]
+                        ) -> None:
+        levels = None
+        if len(chunk) > 1:
+            try:
+                levels = self.detector.detect_batch_raw(
+                    [frame for _fr, frame in chunk])
+            except Exception:                  # noqa: BLE001
+                levels = None                  # isolate per frame below
+        for i, (fr, frame) in enumerate(chunk):
+            try:
+                wins = (level_windows_from_raw(levels, i)
+                        if levels is not None else None)
+                rects, stats = fr.session.video.commit_full(frame, wins)
+                self._complete(fr, rects, stats)
+            except Exception as e:             # noqa: BLE001
+                self._complete(fr, e)
 
     def _chunks(self, shard: list) -> list[list]:
         """Chop a shard into sub-batches drawn from ``batch_sizes`` (largest
@@ -274,6 +508,13 @@ class DetectorService:
             rates = self._rates.copy()
             n_replans = self._n_replans
             last_plan = self._last_plan
+            stream = {
+                "sessions": len(self._streams),
+                "frames_done": self._frames_done,
+                "frame_modes": dict(self._frame_modes),
+                "window_skip_frac": (self._windows_skipped
+                                     / max(self._windows_total, 1)),
+            }
         total_sim = pod_sim.sum()
         pods = [{
             "name": p.name, "speed": p.speed,
@@ -294,4 +535,5 @@ class DetectorService:
             "replans": n_replans,
             "last_plan": (dict(zip(last_plan.pod_names, last_plan.shares))
                           if last_plan else {}),
+            "stream": stream,
         }

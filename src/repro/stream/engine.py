@@ -1,0 +1,294 @@
+"""Packed incremental cascade evaluation over changed windows.
+
+This is ``Detector._build_batch_fn``'s shared-compaction tail with the
+dense-wave head cut off: the initial alive set is not "every window that
+survived the dense waves" but "every window whose tile content changed"
+(computed on host by :mod:`repro.stream.tiles`).  Changed windows from
+every frame in the stack and every pyramid level are compacted into one
+shared window list and run through *all* cascade stages with the packed
+gather arithmetic — which is bit-identical per window to the baseline
+engine's (`repro.core.engine._packed_stage_sum` docstring), so a recomputed
+window reaches exactly the decision a full-frame ``detect`` would.
+
+One jitted program per (bucket shape, batch size, capacity rung), where
+the rung is the smallest power-of-two holding the flush's actual changed
+count (the host built the masks, so the count is known before dispatch).
+Concurrent streams' changed-tile work items share the single compaction,
+which is what makes many mostly-static streams cheap: the packed list is
+sized to the *sum* of their (small) changed sets, paid once per flush.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.cascade import Cascade, WINDOW
+from repro.core.engine import Detector, _window_limits
+from repro.core.integral import integral_images
+from repro.core.pyramid import pyramid_plan, downscale_indices
+
+__all__ = ["StreamGeometry", "StreamEngine"]
+
+_AREA = float(WINDOW * WINDOW)
+
+# smallest rung of the packed-list capacity ladder.  The host knows the
+# exact changed-window count before dispatch (it built the masks), so the
+# engine compiles a few power-of-two capacities and picks the smallest one
+# that fits — no overflow guesswork, and a frame with 600 changed windows
+# pays for ~1024 gather lanes instead of a worst-case static cap.
+STREAM_CAP_BASE = 512
+
+
+def _packed_inv_sigma(pair_flat: jax.Array, img: jax.Array, base: jax.Array,
+                      stride: jax.Array, ys: jax.Array, xs: jax.Array
+                      ) -> jax.Array:
+    """1/sigma for packed windows living on different images and levels.
+
+    ``pair_flat`` is (B, 2, sum_l (h_l+1)*(w_l+1)) — the stacked
+    (ii2, iic) pair of every level, flattened and concatenated.  Same
+    corner order and variance identity as
+    :func:`repro.core.integral.window_inv_sigma`, bit-for-bit, only the
+    lookup goes through the packed (img, base + y*stride + x) indexing —
+    dense per-grid normalization would be wasted work when only a small
+    changed subset of windows is evaluated.
+    """
+
+    def rect(tab, y0, x0):
+        y1, x1 = y0 + WINDOW, x0 + WINDOW
+        return (pair_flat[img, tab, base + y1 * stride + x1]
+                - pair_flat[img, tab, base + y0 * stride + x1]
+                - pair_flat[img, tab, base + y1 * stride + x0]
+                + pair_flat[img, tab, base + y0 * stride + x0])
+
+    s2 = rect(0, ys, xs)
+    s1 = rect(1, ys, xs)
+    var = s2 / _AREA - (s1 / _AREA) ** 2
+    sigma = jnp.sqrt(jnp.maximum(var, 1.0))
+    return 1.0 / sigma
+
+
+def _bulk_stage_sum(cascade: Cascade, ii_flat: jax.Array, img: jax.Array,
+                    base: jax.Array, stride: jax.Array, ys: jax.Array,
+                    xs: jax.Array, inv_sigma: jax.Array,
+                    k0: int, k1: int) -> jax.Array:
+    """Stage sum over packed windows, one *bulk* gather per rect corner.
+
+    Bit-identical decisions to ``repro.core.engine._packed_stage_sum``
+    (same rectangle accumulation order, same normalization, weak votes
+    summed in ascending-``k`` order), but restructured for XLA: instead of
+    a ``fori_loop`` issuing 12 tiny gathers per weak classifier, all
+    ``K = k1 - k0`` weak classifiers' corner lookups are batched into 4
+    gathers of shape (K, 3, cap).  On CPU this is the difference between
+    the gather being a vectorized kernel and a per-classifier dispatch
+    loop — the streaming engine runs every cascade stage on the packed
+    list (no dense waves to hide behind), so this is its hot path.
+    ``k0``/``k1`` must be Python ints (stage bounds are static).
+    """
+    rects = cascade.rect_xywh[k0:k1]            # (K, 3, 4) int32
+    w = cascade.rect_w[k0:k1]                   # (K, 3)
+    rx = rects[:, :, 0][:, :, None]
+    ry = rects[:, :, 1][:, :, None]
+    rw = rects[:, :, 2][:, :, None]
+    rh = rects[:, :, 3][:, :, None]
+    y0 = ys[None, None, :] + ry                 # (K, 3, cap)
+    x0 = xs[None, None, :] + rx
+    y1 = y0 + rh
+    x1 = x0 + rw
+
+    def g(y, x):
+        return ii_flat[img[None, None, :],
+                       base[None, None, :] + y * stride[None, None, :] + x]
+
+    area = g(y1, x1) - g(y0, x1) - g(y1, x0) + g(y0, x0)   # (K, 3, cap)
+    feat = jnp.zeros((area.shape[0], area.shape[2]), jnp.float32)
+    for r in range(rects.shape[1]):
+        feat = feat + w[:, r, None] * area[:, r]
+    f_norm = feat * inv_sigma[None, :] / _AREA
+    votes = jnp.where(f_norm < cascade.wc_threshold[k0:k1, None],
+                      cascade.left_val[k0:k1, None],
+                      cascade.right_val[k0:k1, None])
+    acc = jnp.zeros_like(inv_sigma)
+    for k in range(k1 - k0):    # ascending-k adds, matching the fori_loop
+        acc = acc + votes[k]
+    return acc
+
+
+class StreamGeometry:
+    """Static per-bucket geometry shared by host planning and jitted code:
+    pyramid plan, per-level window grids, flat slot layout, SAT layout."""
+
+    def __init__(self, detector: Detector, hp: int, wp: int):
+        cfg = detector.config
+        self.hp, self.wp = hp, wp
+        self.step = cfg.step
+        self.plan = pyramid_plan(hp, wp, cfg.scale_factor)
+        self.level_windows: list[tuple[int, int]] = []   # (ny, nx) per level
+        self.slot_offsets: list[int] = [0]               # flat slot ranges
+        lvl_parts, y_parts, x_parts = [], [], []
+        sat_sizes, sat_strides = [], []
+        for li, lv in enumerate(self.plan):
+            ny = (lv.height - WINDOW) // self.step + 1
+            nx = (lv.width - WINDOW) // self.step + 1
+            self.level_windows.append((ny, nx))
+            self.slot_offsets.append(self.slot_offsets[-1] + ny * nx)
+            gy = np.arange(ny, dtype=np.int32) * self.step
+            gx = np.arange(nx, dtype=np.int32) * self.step
+            lvl_parts.append(np.full(ny * nx, li, np.int32))
+            y_parts.append(np.repeat(gy, nx))
+            x_parts.append(np.tile(gx, ny))
+            sat_sizes.append((lv.height + 1) * (lv.width + 1))
+            sat_strides.append(lv.width + 1)
+        self.n_slots = self.slot_offsets[-1]
+        self.lvl_of_slot = np.concatenate(lvl_parts) if self.plan else \
+            np.zeros(0, np.int32)
+        self.y_of_slot = np.concatenate(y_parts) if self.plan else \
+            np.zeros(0, np.int32)
+        self.x_of_slot = np.concatenate(x_parts) if self.plan else \
+            np.zeros(0, np.int32)
+        self.sat_base_of_lvl = np.concatenate(
+            [[0], np.cumsum(sat_sizes)[:-1]]).astype(np.int32) if self.plan \
+            else np.zeros(0, np.int32)
+        self.sat_stride_of_lvl = np.asarray(sat_strides, np.int32)
+
+    def limits(self, h: int, w: int) -> list[tuple[int, int]]:
+        """Per-level inclusive (y_lim, x_lim) for a true (h, w) frame."""
+        return [_window_limits(h, w, lv.height, lv.width, self.hp, self.wp)
+                for lv in self.plan]
+
+    def split_levels(self, flat: np.ndarray) -> list[np.ndarray]:
+        """Flat (n_slots,) per-window array -> one array per level."""
+        return [flat[self.slot_offsets[li]:self.slot_offsets[li + 1]]
+                for li in range(len(self.plan))]
+
+
+class StreamEngine:
+    """Jitted incremental evaluators over a :class:`Detector`'s cascade."""
+
+    def __init__(self, detector: Detector, max_changed_frac: float = 0.5):
+        self.detector = detector
+        self.max_changed_frac = max_changed_frac
+        self._geos: dict[tuple[int, int], StreamGeometry] = {}
+        self._fns: dict[tuple[int, int, int, int], object] = {}
+
+    def geometry(self, hp: int, wp: int) -> StreamGeometry:
+        key = (hp, wp)
+        if key not in self._geos:
+            self._geos[key] = StreamGeometry(self.detector, hp, wp)
+        return self._geos[key]
+
+    def cap_budget(self, geo: StreamGeometry, batch: int) -> int:
+        """Most changed windows a flush may evaluate incrementally; beyond
+        it a full refresh is cheaper anyway (the caller's fallback)."""
+        total = max(geo.n_slots * batch, 1)
+        return min(max(int(math.ceil(total * self.max_changed_frac)), 1),
+                   total)
+
+    def _cap_for(self, geo: StreamGeometry, batch: int, n_changed: int
+                 ) -> int:
+        """Smallest ladder rung holding ``n_changed`` packed windows."""
+        total = max(geo.n_slots * batch, 1)
+        cap = STREAM_CAP_BASE
+        while cap < n_changed:
+            cap *= 2
+        return min(cap, total)
+
+    # ------------------------------------------------------------- build
+    def _build_fn(self, hp: int, wp: int, batch: int, cap: int):
+        det = self.detector
+        geo = self.geometry(hp, wp)
+        bounds = det.stage_bounds
+        n_stages = det.n_stages
+        n_slots = geo.n_slots
+        lvl_of_slot = jnp.asarray(geo.lvl_of_slot)
+        y_of_slot = jnp.asarray(geo.y_of_slot)
+        x_of_slot = jnp.asarray(geo.x_of_slot)
+        sat_base_of_lvl = jnp.asarray(geo.sat_base_of_lvl)
+        sat_stride_of_lvl = jnp.asarray(geo.sat_stride_of_lvl)
+
+        def frame_fn(cascade: Cascade, stack: jax.Array,
+                     mask_flat: jax.Array):
+            # stack: (B, hp, wp) f32 frames; mask_flat: (B, n_slots) bool of
+            # windows to recompute (already limit-masked on host).
+            sat_parts, pair_parts = [], []
+            for lv in geo.plan:
+                ys_idx = downscale_indices(hp, lv.height)
+                xs_idx = downscale_indices(wp, lv.width)
+                img_l = stack[:, ys_idx[:, None], xs_idx[None, :]]
+                ii_l, pair_l = jax.vmap(integral_images)(img_l)
+                sat_parts.append(ii_l.reshape(batch, -1))
+                pair_parts.append(pair_l.reshape(batch, 2, -1))
+
+            alive_flat = mask_flat.reshape(-1)
+            ii_flat = jnp.concatenate(sat_parts, axis=1)
+            pair_flat = jnp.concatenate(pair_parts, axis=2)
+            recomputed = mask_flat.sum(axis=1).astype(jnp.int32)  # (B,)
+            overflow = alive_flat.sum() > cap
+            idx = jnp.nonzero(alive_flat, size=cap, fill_value=-1)[0]
+            sel = jnp.maximum(idx, 0)
+            valid = idx >= 0
+            b_sel = sel // n_slots
+            slot = sel % n_slots
+            lvl_sel = jnp.take(lvl_of_slot, slot)
+            y_sel = jnp.take(y_of_slot, slot)
+            x_sel = jnp.take(x_of_slot, slot)
+            base_sel = jnp.take(sat_base_of_lvl, lvl_sel)
+            stride_sel = jnp.take(sat_stride_of_lvl, lvl_sel)
+            inv_sel = _packed_inv_sigma(pair_flat, b_sel, base_sel,
+                                        stride_sel, y_sel, x_sel)
+            for s in range(n_stages):
+                k0, k1 = bounds[s], bounds[s + 1]
+                ss = _bulk_stage_sum(cascade, ii_flat, b_sel, base_sel,
+                                     stride_sel, y_sel, x_sel, inv_sel,
+                                     k0, k1)
+                valid = valid & (ss >= cascade.stage_threshold[s])
+            # scatter survivors back onto the full (B, n_slots) grid; dead
+            # and padding lanes target index B*n_slots which is dropped
+            target = jnp.where(valid, sel, batch * n_slots)
+            survivors = jnp.zeros(batch * n_slots, bool).at[target].set(
+                True, mode="drop")
+            return survivors.reshape(batch, n_slots), recomputed, overflow
+
+        return jax.jit(frame_fn)
+
+    def _fn(self, hp: int, wp: int, batch: int, cap: int):
+        key = (hp, wp, batch, cap)
+        if key not in self._fns:
+            self._fns[key] = self._build_fn(hp, wp, batch, cap)
+        return self._fns[key]
+
+    # -------------------------------------------------------------- run
+    def incremental(self, frames: list[np.ndarray],
+                    masks_per_frame: list[list[np.ndarray]],
+                    hp: int, wp: int
+                    ) -> tuple[list[np.ndarray], np.ndarray, bool]:
+        """Evaluate changed windows of a same-bucket stack of frames.
+
+        ``masks_per_frame[i]`` is one flat bool mask per pyramid level for
+        frame ``i``.  Returns ``(survivor bitmaps per frame (flat n_slots),
+        recomputed-window counts, overflow)`` — on overflow (more changed
+        windows than ``cap_budget``) nothing is dispatched and the caller
+        must fall back to a full refresh.
+        """
+        geo = self.geometry(hp, wp)
+        batch = len(frames)
+        mask_flat = np.stack([np.concatenate(masks_per_frame[i])
+                              for i in range(batch)])
+        counts = mask_flat.sum(axis=1).astype(np.int32)
+        n_changed = int(counts.sum())
+        if n_changed > self.cap_budget(geo, batch):
+            return [], counts, True
+        cap = self._cap_for(geo, batch, n_changed)
+        stack = np.zeros((batch, hp, wp), np.float32)
+        for i, f in enumerate(frames):
+            h, w = f.shape
+            stack[i, :h, :w] = f
+        out, recomputed, overflow = self._fn(hp, wp, batch, cap)(
+            self.detector.cascade, jnp.asarray(stack),
+            jnp.asarray(mask_flat))
+        bitmaps = np.asarray(out)
+        return ([bitmaps[i] for i in range(batch)],
+                np.asarray(recomputed), bool(np.asarray(overflow)))

@@ -1,0 +1,290 @@
+"""Streaming video detection with temporal tile-reuse.
+
+:class:`VideoDetector` wraps a calibrated :class:`repro.core.Detector` for
+one video stream.  Per frame it:
+
+1. scores each tile of the frame against the stream's *reference frame*
+   (the pixels the cached decisions were computed on — not simply the
+   previous frame, so sub-threshold drift never compounds silently);
+2. maps changed tiles (plus a dilated halo) to the exact set of detection
+   windows whose receptive field they overlap, per pyramid level;
+3. re-evaluates only those windows through the packed incremental engine
+   (:class:`repro.stream.StreamEngine`) and merges the survivors into the
+   cached per-level bitmaps; everything else is reused.
+
+Exactness: with ``threshold <= 0`` a tile is "changed" iff any pixel
+differs, so the cache always reflects the current frame's pixels exactly
+and the output is **bit-identical** to running ``Detector.detect`` on
+every frame (same windows, same order, same grouping).  With a positive
+threshold, cached decisions may lag the true frame by at most the
+per-tile score threshold; a periodic keyframe (``keyframe_interval``)
+re-detects the whole frame and bounds the staleness window.
+
+Fallbacks keep the fast path honest: if the changed-window fraction
+exceeds ``full_refresh_frac``, or the packed list overflows its static
+capacity, the frame is re-detected in full (same result, no drift).
+
+The plan/commit split (``plan_frame`` / ``commit_*``) exists so the
+serving layer can batch work *across* streams: many sessions' changed
+windows share one packed compaction, and many sessions' keyframes share
+one ``detect_batch`` flush.  ``process`` composes the two for the
+single-stream case.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.engine import Detector
+from repro.core import nms
+from .engine import StreamEngine, StreamGeometry
+from .tiles import (tile_grid_shape, tile_change_scores, dilate_tiles,
+                    changed_window_mask)
+
+__all__ = ["StreamConfig", "FrameStats", "FramePlan", "VideoDetector",
+           "level_windows_from_raw"]
+
+
+def level_windows_from_raw(levels, index: int | None = None
+                           ) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Surviving (ys, xs) per pyramid level from a raw detector pass.
+
+    ``levels`` is ``Detector.detect_raw`` output (``index=None``) or the
+    batched ``detect_batch_raw`` output (``index`` = image position); the
+    single decode/overflow policy for every keyframe path, single-stream
+    and service-batched alike."""
+    wins = []
+    for res, _scale in levels:
+        over = np.asarray(res.overflow)
+        if bool(over if index is None else over[index]):
+            raise RuntimeError(
+                "wave-engine capacity overflow on stream keyframe; raise "
+                "capacity_fracs (see Detector.calibrated)")
+        ys = np.asarray(res.ys if index is None else res.ys[index])
+        xs = np.asarray(res.xs if index is None else res.xs[index])
+        val = np.asarray(res.valid if index is None else res.valid[index])
+        wins.append((ys[val], xs[val]))
+    return wins
+
+
+class StreamConfig(NamedTuple):
+    tile: int = 32                 # tile edge, image coords
+    threshold: float = 0.0         # mean-sq change per pixel; <=0 = exact
+    halo: int = 1                  # dilation rings around changed tiles
+    keyframe_interval: int = 64    # full re-detect cadence; 0 = never
+    max_changed_frac: float = 0.5  # incremental budget as a window fraction
+    full_refresh_frac: float = 0.5  # changed-window frac forcing full detect
+
+
+class FrameStats(NamedTuple):
+    frame_idx: int
+    mode: str                      # 'full' | 'incremental' | 'cached'
+    tiles_total: int
+    tiles_changed: int             # after halo dilation
+    windows_total: int             # live (limit-valid) windows, all levels
+    windows_recomputed: int
+
+    @property
+    def tile_skip_frac(self) -> float:
+        return 1.0 - self.tiles_changed / max(self.tiles_total, 1)
+
+    @property
+    def window_skip_frac(self) -> float:
+        return 1.0 - self.windows_recomputed / max(self.windows_total, 1)
+
+
+class FramePlan(NamedTuple):
+    mode: str                      # 'full' | 'incremental' | 'cached'
+    masks: list | None             # per-level flat recompute masks
+    changed_tiles: np.ndarray | None   # dilated tile mask
+    tiles_changed: int
+    windows_to_recompute: int
+
+
+class VideoDetector:
+    """One stream's temporal state over a shared :class:`Detector`."""
+
+    def __init__(self, detector: Detector, config: StreamConfig = StreamConfig(),
+                 engine: StreamEngine | None = None):
+        self.detector = detector
+        self.config = config
+        self.engine = engine or StreamEngine(detector,
+                                             config.max_changed_frac)
+        self._shape: tuple[int, int] | None = None
+        self._geo: StreamGeometry | None = None
+        self._limits: list[tuple[int, int]] = []
+        self._n_live = 0
+        self._ref: np.ndarray | None = None         # reference pixels
+        self._bitmap: np.ndarray | None = None      # flat survivor cache
+        self._rects: np.ndarray | None = None       # cached grouped output
+        self._frame_idx = 0
+        self._last_full = -1
+
+    # ------------------------------------------------------------ plumbing
+    @property
+    def frame_idx(self) -> int:
+        return self._frame_idx
+
+    @property
+    def bucket_hw(self) -> tuple[int, int] | None:
+        return None if self._geo is None else (self._geo.hp, self._geo.wp)
+
+    def _init_stream(self, frame: np.ndarray) -> None:
+        h, w = frame.shape
+        self._shape = (h, w)
+        hp, wp = self.detector._bucket_hw(h, w)
+        self._geo = self.engine.geometry(hp, wp)
+        self._limits = self._geo.limits(h, w)
+        self._n_live = 0
+        for (ny, nx), (y_lim, x_lim) in zip(self._geo.level_windows,
+                                            self._limits):
+            n_y = min(int(y_lim) // self._geo.step + 1, ny) if y_lim >= 0 else 0
+            n_x = min(int(x_lim) // self._geo.step + 1, nx) if x_lim >= 0 else 0
+            self._n_live += n_y * n_x
+
+    def _check_frame(self, frame) -> np.ndarray:
+        frame = np.asarray(frame, np.float32)
+        if frame.ndim != 2:
+            raise ValueError(f"expected grayscale (H, W) frame, got "
+                             f"shape {frame.shape}")
+        if self._shape is None:
+            self._init_stream(frame)
+        elif frame.shape != self._shape:
+            raise ValueError(f"stream frame shape changed: {self._shape} -> "
+                             f"{frame.shape}; open a new stream instead")
+        return frame
+
+    # ------------------------------------------------------------ planning
+    def plan_frame(self, frame) -> tuple[np.ndarray, FramePlan]:
+        """Decide how to process ``frame``; returns (frame_f32, plan)."""
+        frame = self._check_frame(frame)
+        cfg = self.config
+        geo = self._geo
+        if self._ref is None:
+            return frame, FramePlan("full", None, None, 0, 0)
+        if geo.n_slots == 0:       # frame smaller than the detection window
+            return frame, FramePlan("cached", None, None, 0, 0)
+        due = (cfg.keyframe_interval > 0 and
+               self._frame_idx - self._last_full >= cfg.keyframe_interval)
+        if due:
+            return frame, FramePlan("full", None, None, 0, 0)
+        exact = cfg.threshold <= 0
+        scores, changed_any = tile_change_scores(self._ref, frame, cfg.tile,
+                                                 exact=exact)
+        changed = changed_any if exact else (scores > cfg.threshold)
+        changed = dilate_tiles(changed, cfg.halo)
+        n_changed = int(changed.sum())
+        if n_changed == 0:
+            return frame, FramePlan("cached", None, changed, 0, 0)
+        # tile fraction under-estimates the window fraction (receptive
+        # fields cover multiple tiles), so this is a safe early exit that
+        # skips per-level mask building when a refresh is certain anyway
+        if n_changed > cfg.full_refresh_frac * changed.size:
+            return frame, FramePlan("full", None, changed, n_changed, 0)
+        masks = [changed_window_mask(changed, cfg.tile, geo.hp, geo.wp,
+                                     lv, geo.step, y_lim, x_lim)
+                 for lv, (y_lim, x_lim) in zip(geo.plan, self._limits)]
+        n_rec = int(sum(int(m.sum()) for m in masks))
+        if n_rec > cfg.full_refresh_frac * max(self._n_live, 1):
+            return frame, FramePlan("full", None, changed, n_changed, n_rec)
+        return frame, FramePlan("incremental", masks, changed,
+                                n_changed, n_rec)
+
+    # ------------------------------------------------------------- commits
+    def _decode(self) -> np.ndarray:
+        geo = self._geo
+        idxs = np.nonzero(self._bitmap)[0]
+        scales = np.asarray([lv.scale for lv in geo.plan]) if geo.plan \
+            else np.zeros(0)
+        if len(idxs) == 0:
+            rects = np.zeros((0, 4), np.int32)
+        else:
+            rects = Detector._decode_rects(
+                geo.y_of_slot[idxs], geo.x_of_slot[idxs],
+                scales[geo.lvl_of_slot[idxs]])
+        return nms.group_rectangles(rects, self.detector.config.min_neighbors)
+
+    def _finish(self, frame: np.ndarray, mode: str, tiles_changed: int,
+                recomputed: int) -> tuple[np.ndarray, FrameStats]:
+        self._rects = self._decode() if mode != "cached" else self._rects
+        ty, tx = tile_grid_shape(*self._shape, self.config.tile)
+        stats = FrameStats(self._frame_idx, mode, ty * tx, tiles_changed,
+                           self._n_live, recomputed)
+        self._frame_idx += 1
+        return self._rects.copy(), stats
+
+    def commit_full(self, frame: np.ndarray,
+                    level_windows: list[tuple[np.ndarray, np.ndarray]] | None
+                    = None) -> tuple[np.ndarray, FrameStats]:
+        """Full re-detect: refresh every cached decision from ``frame``.
+
+        ``level_windows`` (surviving (ys, xs) per pyramid level, as produced
+        by the detector's raw paths) lets the serving layer batch many
+        streams' keyframes through ``detect_batch_raw`` and feed each
+        session its slice; when omitted the detector runs directly.
+        """
+        geo = self._geo
+        if level_windows is None:
+            level_windows = level_windows_from_raw(
+                self.detector.detect_raw(frame))
+        bitmap = np.zeros(geo.n_slots, bool)
+        for li, (ys, xs) in enumerate(level_windows):
+            if len(ys) == 0:
+                continue
+            ny, nx = geo.level_windows[li]
+            slots = (geo.slot_offsets[li]
+                     + (np.asarray(ys) // geo.step) * nx
+                     + np.asarray(xs) // geo.step)
+            bitmap[slots] = True
+        self._bitmap = bitmap
+        self._ref = frame.copy()
+        self._last_full = self._frame_idx
+        ty, tx = tile_grid_shape(*self._shape, self.config.tile)
+        return self._finish(frame, "full", ty * tx, self._n_live)
+
+    def commit_incremental(self, frame: np.ndarray, plan: FramePlan,
+                           survivors_flat: np.ndarray
+                           ) -> tuple[np.ndarray, FrameStats]:
+        """Merge recomputed survivors into the cache; update the reference
+        pixels under every recomputed tile."""
+        mask_flat = np.concatenate(plan.masks)
+        self._bitmap = (self._bitmap & ~mask_flat) | survivors_flat
+        h, w = self._shape
+        tile = self.config.tile
+        pix = np.repeat(np.repeat(plan.changed_tiles, tile, axis=0),
+                        tile, axis=1)[:h, :w]
+        self._ref = np.where(pix, frame, self._ref)
+        return self._finish(frame, "incremental", plan.tiles_changed,
+                            plan.windows_to_recompute)
+
+    def commit_cached(self, frame: np.ndarray,
+                      plan: FramePlan) -> tuple[np.ndarray, FrameStats]:
+        return self._finish(frame, "cached", plan.tiles_changed, 0)
+
+    # -------------------------------------------------------------- public
+    def process(self, frame) -> tuple[np.ndarray, FrameStats]:
+        """Detect faces in the next frame of this stream.
+
+        Returns ``(rects, stats)`` with rects exactly as
+        ``Detector.detect`` would format them.
+        """
+        frame, plan = self.plan_frame(frame)
+        if plan.mode == "cached":
+            return self.commit_cached(frame, plan)
+        if plan.mode == "full":
+            return self.commit_full(frame)
+        geo = self._geo
+        bitmaps, _rec, overflow = self.engine.incremental(
+            [frame], [plan.masks], geo.hp, geo.wp)
+        if overflow:   # too many changed windows for the packed capacity
+            return self.commit_full(frame)
+        return self.commit_incremental(frame, plan, bitmaps[0])
+
+    def reset(self) -> None:
+        """Drop all temporal state (next frame is a keyframe)."""
+        self._ref = None
+        self._bitmap = None
+        self._rects = None
+        self._last_full = -1

@@ -8,7 +8,6 @@ live inside the model.  Remat policy comes from the config
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

@@ -1,7 +1,6 @@
 """Checkpoint atomicity/elasticity + data-pipeline determinism."""
 
 import os
-import shutil
 
 import numpy as np
 import jax

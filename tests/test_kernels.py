@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.core.integral import integral_images
 from repro.core import load_cascade
 from repro.configs.viola_jones import DEFAULT_PRETRAINED

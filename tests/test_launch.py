@@ -1,9 +1,7 @@
 """Launch-layer units: roofline HLO parsing, microbatch policy, cell
 matrix, divisibility enforcement (no mesh/device-state needed)."""
 
-import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import SHAPES, list_archs, get_config
 from repro.launch.cells import cell_applicable, CELL_SKIPS, \
@@ -91,7 +89,7 @@ def test_enforce_divisibility_drops_uneven_axes():
     import jax
     from jax.sharding import PartitionSpec as P
     from repro.distributed.sharding import enforce_divisibility
-    mesh = jax.make_mesh((1,), ("data",))   # single-device: every axis=1
+    jax.make_mesh((1,), ("data",))          # single-device: every axis=1
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

@@ -43,9 +43,7 @@ def test_makespan_lower_bounds(dag, mk):
     """No schedule beats the critical path or the aggregate-capacity bound."""
     plat = odroid_xu4()
     r = simulate(dag, plat, mk())
-    rates = [c.rate for cl in plat.clusters for c in [cl] for _ in range(cl.n)]
     cap = sum(cl.rate * cl.n for cl in plat.clusters) * REF_RATE
-    fastest = max(cl.rate for cl in plat.clusters) * REF_RATE
     assert r.makespan >= dag.total_work / cap * 0.99
     assert r.makespan >= dag.critical_path_work() / (
         max(cl.rate for cl in plat.clusters)) / REF_RATE * 0.99

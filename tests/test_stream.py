@@ -1,0 +1,238 @@
+"""Streaming golden-equivalence suite: temporal tile-reuse must never
+change what the detector reports.
+
+- static video => identical boxes to per-frame ``detect`` with >90% of
+  tiles skipped after the first frame;
+- threshold-0 mode => bit-identical boxes on arbitrary video (moving
+  faces, pans), whatever mix of cached/incremental/full frames it takes;
+- keyframe refresh bounds staleness when a positive threshold suppresses
+  recomputation;
+- the tile->window mapping is conservative (never misses a changed
+  window), and overflow/fallback paths degrade to full refresh, not to
+  wrong answers.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Detector, EngineConfig, paper_shaped_cascade
+from repro.core.cascade import WINDOW
+from repro.core.pyramid import downscale_indices
+from repro.stream import (StreamConfig, StreamEngine, VideoDetector,
+                          changed_window_mask, dilate_tiles, make_video,
+                          tile_change_scores)
+from repro.stream.engine import StreamGeometry
+
+CASC = paper_shaped_cascade(0, stage_sizes=[3, 4, 5, 6, 8])
+KW = dict(step=2, scale_factor=1.3, min_neighbors=2)
+HW = 96
+
+
+@pytest.fixture(scope="module")
+def det():
+    return Detector(CASC, EngineConfig(mode="wave", **KW))
+
+
+@pytest.fixture(scope="module")
+def engine(det):
+    # one shared engine so every test reuses the same jitted programs
+    return StreamEngine(det, StreamConfig().max_changed_frac)
+
+
+def _stream(det, engine, **cfg):
+    return VideoDetector(det, StreamConfig(**cfg), engine=engine)
+
+
+# ---------------------------------------------------------------- identity
+def test_static_video_identical_with_skips(det, engine):
+    rng = np.random.default_rng(5)
+    from repro.core.training.data import render_scene
+    frame = render_scene(rng, HW, HW, n_faces=1)[0]
+    base = det.detect(frame)
+    vd = _stream(det, engine, tile=16, threshold=0.0, keyframe_interval=0)
+    for t in range(5):
+        rects, st = vd.process(frame)
+        assert np.array_equal(rects, base)
+        if t == 0:
+            assert st.mode == "full"
+        else:
+            assert st.mode == "cached"
+            assert st.tile_skip_frac == 1.0
+            assert st.tile_skip_frac > 0.9          # the ISSUE's bar
+            assert st.windows_recomputed == 0
+
+
+@pytest.mark.parametrize("kind", ["static_cctv", "moving_face",
+                                  "camera_pan"])
+def test_threshold0_bit_identical(det, engine, kind):
+    video = make_video(kind, n_frames=4, h=HW, w=HW, seed=11)
+    vd = _stream(det, engine, tile=12, threshold=0.0, keyframe_interval=0)
+    modes = []
+    for frame, _gt in video:
+        rects, st = vd.process(frame)
+        assert np.array_equal(rects, det.detect(frame)), \
+            f"{kind} frame {st.frame_idx} ({st.mode}) diverged"
+        modes.append(st.mode)
+    if kind == "static_cctv":   # the small moving object stays incremental
+        assert "incremental" in modes
+
+
+def test_incremental_path_skips_windows(det, engine):
+    video = make_video("static_cctv", n_frames=4, h=HW, w=HW, seed=2)
+    vd = _stream(det, engine, tile=12, threshold=0.0, keyframe_interval=0)
+    for i, (frame, _gt) in enumerate(video):
+        rects, st = vd.process(frame)
+        if i > 0:
+            assert st.mode == "incremental"
+            assert 0 < st.windows_recomputed < st.windows_total
+            assert st.window_skip_frac > 0.5
+        assert np.array_equal(rects, det.detect(frame))
+
+
+# ---------------------------------------------------------------- keyframe
+def test_keyframe_bounds_staleness(det, engine):
+    video_a = make_video("static_cctv", n_frames=1, h=HW, w=HW, seed=3)
+    video_b = make_video("static_cctv", n_frames=1, h=HW, w=HW, seed=4)
+    frame_a, frame_b = video_a[0][0], video_b[0][0]
+    base_a, base_b = det.detect(frame_a), det.detect(frame_b)
+    # a huge threshold suppresses all incremental recomputation: only the
+    # keyframe cadence refreshes the cache
+    vd = _stream(det, engine, tile=16, threshold=1e12, keyframe_interval=4)
+    for _ in range(3):
+        rects, st = vd.process(frame_a)
+    # scene cut: frames 3.. show scene B, but stay stale until the keyframe
+    rects, st = vd.process(frame_b)
+    assert st.mode == "cached"
+    assert np.array_equal(rects, base_a)            # stale by design
+    rects, st = vd.process(frame_b)                 # frame 4 == keyframe
+    assert st.mode == "full"
+    assert np.array_equal(rects, base_b)            # staleness bounded
+
+
+def test_keyframe_disabled_never_refreshes(det, engine):
+    frame = make_video("static_cctv", n_frames=1, h=HW, w=HW, seed=3)[0][0]
+    vd = _stream(det, engine, tile=16, threshold=1e12, keyframe_interval=0)
+    vd.process(frame)
+    for _ in range(6):
+        _rects, st = vd.process(frame)
+        assert st.mode == "cached"
+
+
+# ----------------------------------------------------------- tile mapping
+def test_tile_change_scores_localized():
+    prev = np.full((64, 64), 100.0, np.float32)
+    cur = prev.copy()
+    cur[40, 9] += 3.0
+    scores, changed_any = tile_change_scores(prev, cur, tile=16)
+    assert changed_any.sum() == 1 and changed_any[2, 0]
+    assert scores[2, 0] > 0
+    assert (scores[~changed_any] < 1e-6).all()
+
+
+def test_tile_change_any_immune_to_absorption():
+    """A tiny change must be flagged even next to a huge one (float SAT
+    partial sums would absorb it; the exact any-reduction must not)."""
+    prev = np.zeros((64, 64), np.float32)
+    cur = prev.copy()
+    cur[:16, :16] = 255.0                 # huge change, tile (0,0)
+    cur[40, 40] = 1e-4                    # tiny change, tile (2,2)
+    _scores, changed_any = tile_change_scores(prev, cur, tile=16)
+    assert changed_any[0, 0] and changed_any[2, 2]
+    assert changed_any.sum() == 2
+
+
+def test_dilate_tiles():
+    m = np.zeros((5, 5), bool)
+    m[2, 2] = True
+    d = dilate_tiles(m, 1)
+    assert d.sum() == 5 and d[1, 2] and d[3, 2] and d[2, 1] and d[2, 3]
+    assert dilate_tiles(m, 0) is m
+
+
+def test_changed_window_mask_is_conservative(det):
+    """Property: every window whose receptive field touches a changed pixel
+    must be in the mask (brute force over the nearest-neighbour map)."""
+    rng = np.random.default_rng(9)
+    geo = StreamGeometry(det, 64, 64)
+    tile = 16
+    for _ in range(3):
+        changed = rng.random((4, 4)) < 0.3
+        if not changed.any():
+            continue
+        pix = np.repeat(np.repeat(changed, tile, 0), tile, 1)
+        for lv, (ny, nx) in zip(geo.plan, geo.level_windows):
+            mask = changed_window_mask(
+                changed, tile, 64, 64, lv, geo.step,
+                lv.height - WINDOW, lv.width - WINDOW).reshape(ny, nx)
+            ys_map = downscale_indices(64, lv.height)
+            xs_map = downscale_indices(64, lv.width)
+            for iy in range(ny):
+                for ix in range(nx):
+                    y, x = iy * geo.step, ix * geo.step
+                    rows = ys_map[y:y + WINDOW]
+                    cols = xs_map[x:x + WINDOW]
+                    touches = pix[np.ix_(rows, cols)].any()
+                    if touches:
+                        assert mask[iy, ix], (lv, iy, ix)
+
+
+# ------------------------------------------------------------- fallbacks
+def test_overflow_falls_back_to_full(det):
+    """A capacity too small for the changed set must degrade to a full
+    refresh with identical results, never drop windows."""
+    small = StreamEngine(det, 0.0001)   # budget ~1 window: always overflows
+    video = make_video("static_cctv", n_frames=3, h=HW, w=HW, seed=2)
+    vd = VideoDetector(det, StreamConfig(tile=12, threshold=0.0,
+                                         keyframe_interval=0,
+                                         full_refresh_frac=1.1),
+                       engine=small)
+    saw_fallback = False
+    for i, (frame, _gt) in enumerate(video):
+        rects, st = vd.process(frame)
+        assert np.array_equal(rects, det.detect(frame))
+        if i > 0 and st.mode == "full":
+            saw_fallback = True
+    assert saw_fallback
+
+
+def test_frame_shape_change_raises(det, engine):
+    vd = _stream(det, engine, tile=16)
+    vd.process(np.zeros((HW, HW), np.float32))
+    with pytest.raises(ValueError, match="shape changed"):
+        vd.process(np.zeros((HW, HW + 2), np.float32))
+    with pytest.raises(ValueError, match="grayscale"):
+        VideoDetector(det).process(np.zeros((4, HW, HW), np.float32))
+
+
+def test_sub_window_stream_is_empty(det, engine):
+    vd = _stream(det, engine, tile=8)
+    for _ in range(2):
+        rects, _st = vd.process(np.zeros((10, 10), np.float32))
+        assert rects.shape == (0, 4)
+
+
+# ------------------------------------------------------------- batch path
+def test_batched_incremental_matches_single(det, engine):
+    """Concurrent streams' changed windows share one packed compaction;
+    per-frame results must equal the single-stream path."""
+    videos = [make_video("static_cctv", n_frames=3, h=HW, w=HW, seed=s)
+              for s in (0, 1)]
+    vds = [_stream(det, engine, tile=12, threshold=0.0, keyframe_interval=0)
+           for _ in videos]
+    # frame 0: full per stream
+    for vd, vid in zip(vds, videos):
+        vd.process(vid[0][0])
+    for t in range(1, 3):
+        frames, plans = [], []
+        for vd, vid in zip(vds, videos):
+            frame, plan = vd.plan_frame(vid[t][0])
+            assert plan.mode == "incremental"
+            frames.append(frame)
+            plans.append(plan)
+        geo = vds[0]._geo
+        bitmaps, _rec, overflow = engine.incremental(
+            frames, [p.masks for p in plans], geo.hp, geo.wp)
+        assert not overflow
+        for vd, vid, plan, bm in zip(vds, videos, plans, bitmaps):
+            rects, _st = vd.commit_incremental(vid[t][0], plan, bm)
+            assert np.array_equal(rects, det.detect(vid[t][0]))

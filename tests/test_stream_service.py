@@ -1,0 +1,99 @@
+"""Stream sessions through the micro-batching service: ordered frame
+futures, cross-stream batching, pod accounting, and parity with both the
+single-stream ``VideoDetector`` and per-frame ``detect``."""
+
+import numpy as np
+import pytest
+
+from repro.core import Detector, EngineConfig, paper_shaped_cascade
+from repro.serve import DetectorService, FrameRequest, PodSpec
+from repro.stream import StreamConfig, make_video
+
+CASC = paper_shaped_cascade(0, stage_sizes=[3, 4, 5, 6, 8])
+KW = dict(step=2, scale_factor=1.3, min_neighbors=2)
+HW = 96
+SCFG = StreamConfig(tile=12, threshold=0.0, keyframe_interval=4)
+
+
+@pytest.fixture(scope="module")
+def detector():
+    return Detector(CASC, EngineConfig(mode="wave", **KW))
+
+
+@pytest.fixture(scope="module")
+def videos():
+    return [make_video("static_cctv", n_frames=5, h=HW, w=HW, seed=s)
+            for s in (0, 1, 2)]
+
+
+def test_concurrent_streams_match_detect(detector, videos):
+    svc = DetectorService(detector,
+                          pods=(PodSpec("big", 1.0), PodSpec("little", 0.4)),
+                          stream_config=SCFG)
+    sessions = [svc.open_stream() for _ in videos]
+    reqs = []
+    for t in range(5):
+        for sess, vid in zip(sessions, videos):
+            reqs.append((vid[t][0], sess.submit_frame(vid[t][0])))
+    svc.flush()
+    for frame, r in reqs:
+        assert isinstance(r, FrameRequest)
+        assert np.array_equal(r.result(), detector.detect(frame))
+        assert r.stats is not None and r.latency_s >= 0
+    st = svc.stats()
+    assert st["stream"]["sessions"] == 3
+    assert st["stream"]["frames_done"] == 15
+    modes = st["stream"]["frame_modes"]
+    assert modes["full"] >= 3                 # one keyframe per stream
+    assert modes["incremental"] > 0           # batched changed-tile work
+    assert 0 < st["stream"]["window_skip_frac"] < 1
+    assert sum(p["images"] for p in st["pods"]) == 15
+
+
+def test_frames_processed_in_order(detector, videos):
+    svc = DetectorService(detector, stream_config=SCFG)
+    sess = svc.open_stream()
+    reqs = [sess.submit_frame(f) for f, _gt in videos[0]]
+    svc.flush()
+    idxs = [r.stats.frame_idx for r in reqs]
+    assert idxs == sorted(idxs) == list(range(len(reqs)))
+
+
+def test_detect_frames_convenience(detector, videos):
+    svc = DetectorService(detector, stream_config=SCFG)
+    sess = svc.open_stream()
+    frames = [f for f, _gt in videos[1][:3]]
+    got = sess.detect_frames(frames)
+    for frame, rects in zip(frames, got):
+        assert np.array_equal(rects, detector.detect(frame))
+
+
+def test_streams_and_oneshots_share_flush(detector, videos):
+    svc = DetectorService(detector, stream_config=SCFG)
+    sess = svc.open_stream()
+    img = videos[2][0][0]
+    fr = sess.submit_frame(videos[0][0][0])
+    one = svc.submit(img)
+    assert svc.flush() == 2
+    assert np.array_equal(one.result(), detector.detect(img))
+    assert np.array_equal(fr.result(), detector.detect(videos[0][0][0]))
+
+
+def test_closed_stream_rejects_frames(detector, videos):
+    svc = DetectorService(detector, stream_config=SCFG)
+    sess = svc.open_stream()
+    sess.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.submit_frame(videos[0][0][0])
+    assert svc.stats()["stream"]["sessions"] == 0
+
+
+def test_bad_frame_completes_with_error(detector, videos):
+    svc = DetectorService(detector, stream_config=SCFG)
+    sess = svc.open_stream()
+    ok = sess.submit_frame(videos[0][0][0])
+    bad = sess.submit_frame(np.zeros((HW, HW + 2), np.float32))  # shape change
+    svc.flush()
+    assert np.array_equal(ok.result(), detector.detect(videos[0][0][0]))
+    with pytest.raises(ValueError, match="shape changed"):
+        bad.result()

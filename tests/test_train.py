@@ -11,8 +11,8 @@ from repro.configs import get_smoke_config
 from repro.models import build_model
 from repro.train import init_train_state, make_train_step
 from repro.train.losses import cross_entropy_loss
-from repro.optim.adamw import (adamw_init, adamw_update, cosine_schedule,
-                               global_norm)
+from repro.optim.adamw import (adamw_init, adamw_update,
+                               cosine_schedule)
 from repro.distributed.compression import (compress_leaf, decompress_leaf,
                                            make_compressor)
 
