@@ -23,6 +23,7 @@ from .common import save_rows, print_table, pretrained_cascade
 SCENARIOS = [
     # (name, threshold, tile, keyframe_interval)
     ("static_cctv", 0.0, 16, 0),
+    ("intermittent_cctv", 0.0, 16, 0),
     ("moving_face", 0.0, 16, 0),
     ("lighting_drift", 4.0, 16, 8),
     ("camera_pan", 0.0, 16, 0),
@@ -62,6 +63,10 @@ def _run_scenario(det, engine, kind, threshold, tile, keyframe, n_frames, hw):
 
     lat_ms = np.asarray(lat) * 1e3
     exact = all(np.array_equal(a, b) for a, b in zip(baseline, streamed))
+    # fraction of pyramid-level SAT/head builds actually run per frame
+    # (after the first keyframe): the level-subset engine's skip metric
+    lvl_sat = float(np.mean([s.levels_active / max(s.levels_total, 1)
+                             for s in stats[1:]])) if len(stats) > 1 else 1.0
     return {
         "scenario": kind,
         "threshold": threshold,
@@ -73,6 +78,7 @@ def _run_scenario(det, engine, kind, threshold, tile, keyframe, n_frames, hw):
         "p95_ms": float(np.percentile(lat_ms, 95)),
         "tile_skip": float(np.mean([s.tile_skip_frac for s in stats])),
         "window_skip": float(np.mean([s.window_skip_frac for s in stats])),
+        "lvl_sat_frac": lvl_sat,
         "modes": "/".join(f"{m}:{sum(1 for s in stats if s.mode == m)}"
                           for m in ("full", "incremental", "cached")),
         "exact": exact if threshold <= 0 else "-",
@@ -106,6 +112,11 @@ def main(fast: bool = False):
     assert cctv["exact"] is True, "threshold-0 streaming must be bit-exact"
     if cctv["speedup"] < 2.0:
         print(f"WARNING: static-stream speedup {cctv['speedup']:.2f}x < 2x")
+    inter = rows[1]
+    assert inter["exact"] is True, "threshold-0 streaming must be bit-exact"
+    assert inter["lvl_sat_frac"] < 0.5, (
+        f"mostly-idle stream should build SATs for < 50% of pyramid levels "
+        f"per frame, got {inter['lvl_sat_frac']:.2f}")
     return rows
 
 

@@ -29,6 +29,7 @@ def main() -> None:
         print(f"frame {st.frame_idx:2d} {st.mode:11s} "
               f"tiles {st.tiles_changed:3d}/{st.tiles_total}  "
               f"windows {st.windows_recomputed:5d}/{st.windows_total}  "
+              f"level SATs {st.levels_active}/{st.levels_total}  "
               f"faces {len(rects)}")
 
     print("\n== concurrent streams through DetectorService ==")
@@ -47,7 +48,8 @@ def main() -> None:
     st = svc.stats()
     print(f"frames done: {st['stream']['frames_done']}  "
           f"modes: {st['stream']['frame_modes']}  "
-          f"window skip: {st['stream']['window_skip_frac']:.2f}")
+          f"window skip: {st['stream']['window_skip_frac']:.2f}  "
+          f"level skip: {st['stream']['level_skip_frac']:.2f}")
     print(f"p50 {st['latency_ms_p50']:.1f} ms  p95 {st['latency_ms_p95']:.1f} "
           f"ms  pods: {[(p['name'], p['images']) for p in st['pods']]}")
 

@@ -10,13 +10,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "=== tier-1: pytest ==="
 python -m pytest -x -q
 
-echo "=== smoke: bench_detector (ref/dense vs ours, fast) ==="
+echo "=== lint: dead stores (assignments overwritten before use) ==="
+python scripts/check_dead_stores.py src tests benchmarks scripts examples
+
+echo "=== smoke: bench_detector (ref/dense vs ours + pallas batched head, fast) ==="
 python -m benchmarks.run --fast --only bench_detector
 
 echo "=== smoke: bench_rit (content/RIT relation, fast) ==="
 python -m benchmarks.run --fast --only bench_rit
 
-echo "=== smoke: bench_video (streaming tile-reuse, fast) ==="
+echo "=== smoke: bench_video (streaming tile-reuse + level-subset skip, fast) ==="
 python -m benchmarks.run --fast --only bench_video
 
 echo "CI OK"

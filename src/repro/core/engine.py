@@ -20,10 +20,15 @@ Two execution strategies over the same cascade semantics:
   the paper's measured per-stage rejection profile.
 
 The first (densest) waves can run through the Pallas tile kernel
-(``repro.kernels.ops.dense_stage_sums``); later segments use the
-gather-based oracle on the compacted window list, where a dense tile
-kernel would waste lanes.  This hybrid is the SIMD re-expression of the
-paper's "balance between parallelism and optimal computational workload".
+(``repro.kernels.ops.dense_stage_sums``) — on the single-image path *and*
+on the packed batched head, which routes per-level dense waves through the
+batched wrapper ``dense_stage_sums_batch`` (one dispatch per (stage,
+level) over the whole stack); later segments use the gather-based oracle
+on the compacted window list, where a dense tile kernel would waste
+lanes.  Kernelized and oracle paths are verified bit-identical on the
+test corpus (interpret mode).  This hybrid is the SIMD re-expression of
+the paper's "balance between parallelism and optimal computational
+workload".
 
 Batching (serving scale)
 ------------------------
@@ -446,6 +451,10 @@ class Detector:
         n_dense = self._dense_prefix()
         bounds = self.stage_bounds
         n_stages = self.n_stages
+        cascade_static = self.cascade  # static feature geometry for Pallas
+        use_pallas = cfg.use_pallas and step == 1
+        if use_pallas:
+            from repro.kernels import ops as kops
 
         # static per-level geometry + flattened slot / SAT-layout tables
         level_geo = []
@@ -491,9 +500,10 @@ class Detector:
                     inv = window_inv_sigma(
                         ii_pair, jnp.asarray(gy)[:, None],
                         jnp.asarray(gx)[None, :], WINDOW)
-                    return ii, inv.reshape(-1)
+                    return ii, inv                            # (ny, nx) grid
 
-                ii_l, inv_l = jax.vmap(head)(img_l)          # (B,h+1,w+1),(B,n)
+                ii_l, inv_grid_l = jax.vmap(head)(img_l)   # (B,h+1,w+1),(B,ny,nx)
+                inv_l = inv_grid_l.reshape(batch, -1)
                 if tail_segs:
                     sat_parts.append(ii_l.reshape(batch, -1))
                 ys_w = jnp.asarray(np.repeat(gy, nx))
@@ -505,10 +515,18 @@ class Detector:
                            & (xs_w[None, :] <= x_lim[:, None]))  # (B, n)
                 for s in range(n_dense):
                     k0, k1 = bounds[s], bounds[s + 1]
-                    ss = jax.vmap(
-                        lambda ii_b, inv_b: stage_sum_windows(
-                            cascade, ii_b, ys_w, xs_w, inv_b, k0, k1)
-                    )(ii_l, inv_l)                            # (B, n)
+                    if use_pallas:
+                        # dense waves through the Pallas tile kernel, one
+                        # dispatch per (stage, level) over the whole stack —
+                        # same kernel the single-image level_fn runs
+                        ss = kops.dense_stage_sums_batch(
+                            cascade, cascade_static, s, ii_l, inv_grid_l,
+                            interpret=cfg.interpret).reshape(batch, -1)
+                    else:
+                        ss = jax.vmap(
+                            lambda ii_b, inv_b: stage_sum_windows(
+                                cascade, ii_b, ys_w, xs_w, inv_b, k0, k1)
+                        )(ii_l, inv_l)                        # (B, n)
                     alive_l = alive_l & (ss >= cascade.stage_threshold[s])
                     counts = counts.at[s].add(
                         alive_l.sum(axis=1).astype(jnp.int32))

@@ -2,8 +2,9 @@
 
 Raw cascade output fires on many neighbouring windows/scales around a true
 face; detections are clustered by rectangle similarity (union-find over an
-eps-overlap predicate) and clusters with fewer than ``min_neighbors`` members
-are discarded.  Host-side numpy: runs on the (small) set of accepted windows
+eps-overlap predicate) and clusters with fewer than ``min_neighbors + 1``
+members are discarded (OpenCV keeps a cluster iff its size is strictly
+greater than ``groupThreshold``).  Host-side numpy: runs on the (small) set of accepted windows
 after the device pipeline.
 
 The pairwise similarity predicate is evaluated as one vectorized (N, N)
@@ -56,12 +57,14 @@ def _cluster_roots(sim: np.ndarray) -> np.ndarray:
 
 def _cluster_means(rects: np.ndarray, roots: np.ndarray,
                    min_neighbors: int) -> np.ndarray:
-    """Mean rect per kept cluster (OpenCV semantics: clusters smaller than
-    ``max(min_neighbors, 1)`` are kept only if min_neighbors == 0)."""
+    """Mean rect per kept cluster (OpenCV ``groupRectangles`` semantics: a
+    cluster survives iff it has *more than* ``min_neighbors`` members, i.e.
+    ``>= min_neighbors + 1``; with ``min_neighbors == 0`` every cluster —
+    including singletons — is kept)."""
     out = []
     for root in np.unique(roots):
         members = rects[roots == root]
-        if len(members) >= max(min_neighbors, 1) or min_neighbors == 0:
+        if len(members) >= min_neighbors + 1:
             out.append(members.mean(axis=0))
     if not out:
         return np.zeros((0, 4), np.int32)

@@ -49,13 +49,15 @@ class StragglerDetector:
         return [i for i, r in enumerate(self._rates)
                 if r < (1 - self.threshold) * med]
 
-    def replan(self, plan: HeteroPodPlan, quantum: int = 1
+    def replan(self, plan: HeteroPodPlan, quantum: int | None = None
                ) -> HeteroPodPlan | None:
-        """New rate-weighted split if any pod straggles, else None."""
+        """New rate-weighted split if any pod straggles, else None.  The
+        re-plan inherits the old plan's ``quantum`` unless overridden."""
         if not self.stragglers() or self._rates is None:
             return None
-        return rate_weighted_split(sum(plan.shares), self._rates,
-                                   plan.pod_names, quantum)
+        return rate_weighted_split(
+            sum(plan.shares), self._rates, plan.pod_names,
+            plan.quantum if quantum is None else quantum)
 
 
 @dataclass

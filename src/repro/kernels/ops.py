@@ -20,7 +20,9 @@ from .integral_image import integral_image_kernel, DEFAULT_TILE
 from .haar_stage import haar_stage_sums_kernel
 from .window_variance import window_inv_sigma_kernel
 
-__all__ = ["integral_image", "window_inv_sigma_grid", "dense_stage_sums"]
+__all__ = ["integral_image", "window_inv_sigma_grid", "dense_stage_sums",
+           "integral_image_batch", "window_inv_sigma_grid_batch",
+           "dense_stage_sums_batch", "dense_stage_sums_batch_ref"]
 
 
 def _pad_to(x: jax.Array, mh: int, mw: int, mode: str = "edge") -> jax.Array:
@@ -64,7 +66,6 @@ def window_inv_sigma_grid(ii_pair: jax.Array, ny: int, nx: int, *,
     nx_pad = nx + ((-nx) % tx)
     need_h = ny_pad + WINDOW + 1
     need_w = nx_pad + WINDOW + 1
-    ii2p = _pad_to(ii2, 1, 1)  # no-op; keep dtype
     pad_h = max(0, need_h - ii2.shape[0])
     pad_w = max(0, need_w - ii2.shape[1])
     ii2p = jnp.pad(ii2, ((0, pad_h), (0, pad_w)), mode="edge")
@@ -108,6 +109,92 @@ def dense_stage_sums_ref(cascade: Cascade, cascade_static: Cascade, s: int,
     k0 = int(np.asarray(cascade_static.stage_offsets)[s])
     k1 = int(np.asarray(cascade_static.stage_offsets)[s + 1])
     return ref.dense_stage_sums_ref(
+        cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
+        cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
+        cascade.right_val[k0:k1], ii, inv_sigma_grid)
+
+
+# ------------------------------------------------------------------ batched
+# Leading-B-axis twins of the wrappers above, used by the batched detection
+# head (Detector._build_batch_fn with use_pallas=True).  Implemented as
+# jax.vmap over the kernels — Pallas lifts the mapped axis into an extra
+# grid dimension, so one dispatch covers the whole stack — with the tile
+# padding hoisted out so it is computed once per call, not once per image.
+# Oracle twins live in kernels/ref.py (``*_batch_ref``).
+
+@partial(jax.jit, static_argnames=("tile", "interpret", "use_kernel"))
+def integral_image_batch(imgs: jax.Array, *, tile=DEFAULT_TILE,
+                         interpret: bool = True, use_kernel: bool = True
+                         ) -> jax.Array:
+    """(B, H, W) -> (B, H+1, W+1) padded SATs (batched
+    :func:`integral_image`, same per-image contract)."""
+    _, h, w = imgs.shape
+    if not use_kernel:
+        ii = ref.integral_image_batch_ref(imgs)
+    else:
+        padded = _pad_to(imgs.astype(jnp.float32), tile[0], tile[1],
+                         mode="constant")
+        ii = jax.vmap(lambda im: integral_image_kernel(
+            im, tile=tile, interpret=interpret))(padded)[:, :h, :w]
+    return jnp.pad(ii, ((0, 0), (1, 0), (1, 0)))
+
+
+@partial(jax.jit, static_argnames=("ny", "nx", "tile", "interpret",
+                                   "use_kernel"))
+def window_inv_sigma_grid_batch(ii_pairs: jax.Array, ny: int, nx: int, *,
+                                tile=DEFAULT_TILE, interpret: bool = True,
+                                use_kernel: bool = True) -> jax.Array:
+    """(B, ny, nx) 1/sigma grids from stacked (B, 2, H+1, W+1) SAT pairs
+    (batched :func:`window_inv_sigma_grid`, same per-image contract)."""
+    ii2, iic = ii_pairs[:, 0], ii_pairs[:, 1]
+    if not use_kernel:
+        return ref.window_inv_sigma_batch_ref(ii2, iic, ny, nx)
+    ty, tx = tile
+    ny_pad = ny + ((-ny) % ty)
+    nx_pad = nx + ((-nx) % tx)
+    pad_h = max(0, ny_pad + WINDOW + 1 - ii2.shape[1])
+    pad_w = max(0, nx_pad + WINDOW + 1 - ii2.shape[2])
+    cfg = ((0, 0), (0, pad_h), (0, pad_w))
+    ii2p = jnp.pad(ii2, cfg, mode="edge")
+    iicp = jnp.pad(iic, cfg, mode="edge")
+    out = jax.vmap(lambda a, b: window_inv_sigma_kernel(
+        a, b, ny_pad, nx_pad, tile=tile, interpret=interpret))(ii2p, iicp)
+    return out[:, :ny, :nx]
+
+
+def dense_stage_sums_batch(cascade: Cascade, cascade_static: Cascade, s: int,
+                           ii: jax.Array, inv_sigma_grid: jax.Array, *,
+                           tile=DEFAULT_TILE, interpret: bool = True
+                           ) -> jax.Array:
+    """(B, ny, nx) stage-``s`` vote sums over a stack of dense stride-1
+    window grids — batched :func:`dense_stage_sums`: ``ii`` is (B, H+1, W+1)
+    padded SATs, ``inv_sigma_grid`` is (B, ny, nx)."""
+    k0 = int(np.asarray(cascade_static.stage_offsets)[s])
+    k1 = int(np.asarray(cascade_static.stage_offsets)[s + 1])
+    ny, nx = inv_sigma_grid.shape[1:]
+    ty, tx = tile
+    ny_pad = ny + ((-ny) % ty)
+    nx_pad = nx + ((-nx) % tx)
+    pad_h = max(0, ny_pad + WINDOW + 1 - ii.shape[1])
+    pad_w = max(0, nx_pad + WINDOW + 1 - ii.shape[2])
+    iip = jnp.pad(ii, ((0, 0), (0, pad_h), (0, pad_w)), mode="edge")
+    invp = jnp.pad(inv_sigma_grid,
+                   ((0, 0), (0, ny_pad - ny), (0, nx_pad - nx)), mode="edge")
+    out = jax.vmap(lambda ii_b, inv_b: haar_stage_sums_kernel(
+        cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
+        cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
+        cascade.right_val[k0:k1], ii_b, inv_b, tile=tile,
+        interpret=interpret))(iip, invp)
+    return out[:, :ny, :nx]
+
+
+def dense_stage_sums_batch_ref(cascade: Cascade, cascade_static: Cascade,
+                               s: int, ii: jax.Array,
+                               inv_sigma_grid: jax.Array) -> jax.Array:
+    """Oracle twin of :func:`dense_stage_sums_batch` (same contract)."""
+    k0 = int(np.asarray(cascade_static.stage_offsets)[s])
+    k1 = int(np.asarray(cascade_static.stage_offsets)[s + 1])
+    return ref.dense_stage_sums_batch_ref(
         cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
         cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
         cascade.right_val[k0:k1], ii, inv_sigma_grid)

@@ -66,3 +66,31 @@ def dense_stage_sums_ref(rect_xywh: jax.Array, rect_w: jax.Array,
 
     init = jnp.zeros((ny, nx), jnp.float32)
     return jax.lax.fori_loop(0, rect_xywh.shape[0], body, init)
+
+
+# --------------------------------------------------------------- batched
+# Oracle twins of the batched wrappers in ops.py: a leading B axis over the
+# single-image references, so the batched kernels have the same bit-level
+# contract per slice as their single-image counterparts.
+
+def integral_image_batch_ref(imgs: jax.Array) -> jax.Array:
+    """(B, H, W) -> (B, H, W) per-image inclusive 2-D cumsum (unpadded)."""
+    return jax.vmap(integral_image_ref)(imgs)
+
+
+def window_inv_sigma_batch_ref(ii2: jax.Array, iic: jax.Array, ny: int,
+                               nx: int, window: int = WINDOW) -> jax.Array:
+    """(B, ny, nx) 1/sigma grids from stacked (B, H+1, W+1) padded SATs."""
+    return jax.vmap(lambda a, b: window_inv_sigma_ref(a, b, ny, nx, window)
+                    )(ii2, iic)
+
+
+def dense_stage_sums_batch_ref(rect_xywh: jax.Array, rect_w: jax.Array,
+                               wc_threshold: jax.Array, left_val: jax.Array,
+                               right_val: jax.Array, ii: jax.Array,
+                               inv_sigma: jax.Array) -> jax.Array:
+    """(B, ny, nx) stage sums: ``dense_stage_sums_ref`` over a leading B
+    axis of SATs ``ii`` (B, H+1, W+1) and grids ``inv_sigma`` (B, ny, nx)."""
+    return jax.vmap(lambda ii_b, inv_b: dense_stage_sums_ref(
+        rect_xywh, rect_w, wc_threshold, left_val, right_val, ii_b, inv_b)
+    )(ii, inv_sigma)

@@ -42,6 +42,10 @@ class HeteroPodPlan:
     pod_names: tuple[str, ...]
     rates: tuple[float, ...]          # relative throughput (work-units/s)
     shares: tuple[int, ...]           # integer work items per pod
+    quantum: int = 1                  # per-pod share granularity the plan
+    #                                   was built with (e.g. the microbatch
+    #                                   size that must divide device count);
+    #                                   re-plans must preserve it
 
     @property
     def imbalance(self) -> float:
@@ -78,7 +82,8 @@ def rate_weighted_split(n_items: int, rates: Sequence[float],
         fast = int(np.argmax(rates))
         shares = tuple(s + left if i == fast else s
                        for i, s in enumerate(shares))
-    return HeteroPodPlan(names, tuple(float(r) for r in rates), shares)
+    return HeteroPodPlan(names, tuple(float(r) for r in rates), shares,
+                         quantum)
 
 
 def mixed_pod_platform(pod_specs: Sequence[tuple[str, str, int, float]],
@@ -114,10 +119,13 @@ def replan_on_straggle(plan: HeteroPodPlan, measured_rates: Sequence[float],
     """Re-plan when measured rates drift from the plan's assumptions by more
     than ``threshold`` (relative).  Returns the new plan, or None if the
     current plan is still within tolerance — callers re-plan at step
-    boundaries only (cheap, no checkpoint needed)."""
+    boundaries only (cheap, no checkpoint needed).  The re-plan keeps the
+    original plan's ``quantum``, so a share constraint (per-pod microbatch
+    dividing the device count) survives straggler mitigation."""
     old = np.asarray(plan.rates)
     new = np.asarray(measured_rates, np.float64)
     drift = np.abs(new - old) / np.maximum(old, 1e-12)
     if (drift < threshold).all():
         return None
-    return rate_weighted_split(sum(plan.shares), new, plan.pod_names)
+    return rate_weighted_split(sum(plan.shares), new, plan.pod_names,
+                               quantum=plan.quantum)

@@ -161,6 +161,8 @@ class DetectorService:
         self._frames_done = 0
         self._windows_skipped = 0
         self._windows_total = 0
+        self._levels_active = 0
+        self._levels_total = 0
 
         self._lock = threading.Lock()        # queue + accounting state
         self._flush_lock = threading.Lock()  # serializes whole flushes
@@ -370,6 +372,8 @@ class DetectorService:
                     self._windows_total += stats.windows_total
                     self._windows_skipped += (stats.windows_total
                                               - stats.windows_recomputed)
+                    self._levels_total += stats.levels_total
+                    self._levels_active += stats.levels_active
         req.done.set()
 
     # ---------------------------------------------------------- stream run
@@ -407,9 +411,15 @@ class DetectorService:
             for chunk in self._chunks(items):
                 frames = [frame for (_fr, frame, _plan) in chunk]
                 masks = [plan.masks for (_fr, _frame, plan) in chunk]
+                # union of the sessions' active level sets: the chunk shares
+                # one level-subset program, and fully-cached levels across
+                # every stream in the chunk build no SAT at all
+                active = tuple(sorted({
+                    li for (_fr, _frame, plan) in chunk
+                    for li in (plan.active_levels or ())}))
                 try:
                     bitmaps, _rec, overflow = self.stream_engine.incremental(
-                        frames, masks, hp, wp)
+                        frames, masks, hp, wp, active=active)
                 except Exception as e:         # noqa: BLE001
                     for fr, _frame, _plan in chunk:
                         self._complete(fr, e)
@@ -514,6 +524,8 @@ class DetectorService:
                 "frame_modes": dict(self._frame_modes),
                 "window_skip_frac": (self._windows_skipped
                                      / max(self._windows_total, 1)),
+                "level_skip_frac": (1.0 - self._levels_active
+                                    / max(self._levels_total, 1)),
             }
         total_sim = pod_sim.sum()
         pods = [{

@@ -10,12 +10,18 @@ gather arithmetic — which is bit-identical per window to the baseline
 engine's (`repro.core.engine._packed_stage_sum` docstring), so a recomputed
 window reaches exactly the decision a full-frame ``detect`` would.
 
-One jitted program per (bucket shape, batch size, capacity rung), where
-the rung is the smallest power-of-two holding the flush's actual changed
-count (the host built the masks, so the count is known before dispatch).
-Concurrent streams' changed-tile work items share the single compaction,
-which is what makes many mostly-static streams cheap: the packed list is
-sized to the *sum* of their (small) changed sets, paid once per flush.
+One jitted program per (bucket shape, batch size, capacity rung, active
+level subset): the rung is the smallest power-of-two holding the flush's
+actual changed count (the host built the masks, so the count is known
+before dispatch), and the *level subset* is the set of pyramid levels that
+actually have changed windows this flush.  Levels whose windows are all
+cached are skipped entirely — no SAT is built for them, and the packed
+flat SAT/slot layout is laid out over only the active subset (the biggest
+per-frame fixed cost of the previous all-level design: every level's SAT was
+rebuilt every frame even when zero of its windows changed).  Concurrent
+streams' changed-tile work items share the single compaction, which is
+what makes many mostly-static streams cheap: the packed list is sized to
+the *sum* of their (small) changed sets, paid once per flush.
 """
 
 from __future__ import annotations
@@ -31,7 +37,7 @@ from repro.core.engine import Detector, _window_limits
 from repro.core.integral import integral_images
 from repro.core.pyramid import pyramid_plan, downscale_indices
 
-__all__ = ["StreamGeometry", "StreamEngine"]
+__all__ = ["StreamGeometry", "StreamEngine", "LevelSubset"]
 
 _AREA = float(WINDOW * WINDOW)
 
@@ -117,6 +123,36 @@ def _bulk_stage_sum(cascade: Cascade, ii_flat: jax.Array, img: jax.Array,
     return acc
 
 
+class LevelSubset:
+    """Flat slot / SAT layout over an *active subset* of pyramid levels.
+
+    The jitted level-subset program sees only the active levels: its SATs
+    are concatenated in ``levels`` order, its slots are the active levels'
+    slots in the same order.  ``slot_indices`` maps each subset slot back
+    to the full-layout flat slot id, so cached bitmaps merge on host."""
+
+    def __init__(self, geo: "StreamGeometry", levels: tuple[int, ...]):
+        self.levels = levels
+        parts = [np.arange(geo.slot_offsets[li], geo.slot_offsets[li + 1],
+                           dtype=np.int64) for li in levels]
+        self.slot_indices = (np.concatenate(parts) if parts
+                             else np.zeros(0, np.int64))
+        self.n_slots = int(self.slot_indices.shape[0])
+        self.lvl_of_slot = geo.lvl_of_slot[self.slot_indices]
+        self.y_of_slot = geo.y_of_slot[self.slot_indices]
+        self.x_of_slot = geo.x_of_slot[self.slot_indices]
+        # SAT layout over *only* the active levels, addressed by original
+        # level id (inactive levels keep base 0 — no subset slot refers to
+        # them, so the value never feeds a gather)
+        sizes = [geo.sat_sizes[li] for li in levels]
+        bases = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(
+            np.int32) if levels else np.zeros(0, np.int32)
+        self.sat_base_of_lvl = np.zeros(max(len(geo.plan), 1), np.int32)
+        for li, b in zip(levels, bases):
+            self.sat_base_of_lvl[li] = b
+        self.sat_stride_of_lvl = geo.sat_stride_of_lvl
+
+
 class StreamGeometry:
     """Static per-bucket geometry shared by host planning and jitted code:
     pyramid plan, per-level window grids, flat slot layout, SAT layout."""
@@ -142,7 +178,9 @@ class StreamGeometry:
             x_parts.append(np.tile(gx, ny))
             sat_sizes.append((lv.height + 1) * (lv.width + 1))
             sat_strides.append(lv.width + 1)
+        self.sat_sizes = sat_sizes
         self.n_slots = self.slot_offsets[-1]
+        self._subsets: dict[tuple[int, ...], LevelSubset] = {}
         self.lvl_of_slot = np.concatenate(lvl_parts) if self.plan else \
             np.zeros(0, np.int32)
         self.y_of_slot = np.concatenate(y_parts) if self.plan else \
@@ -164,6 +202,12 @@ class StreamGeometry:
         return [flat[self.slot_offsets[li]:self.slot_offsets[li + 1]]
                 for li in range(len(self.plan))]
 
+    def subset(self, levels: tuple[int, ...]) -> LevelSubset:
+        """Cached flat layout over an active level subset (sorted ids)."""
+        if levels not in self._subsets:
+            self._subsets[levels] = LevelSubset(self, levels)
+        return self._subsets[levels]
+
 
 class StreamEngine:
     """Jitted incremental evaluators over a :class:`Detector`'s cascade."""
@@ -172,7 +216,19 @@ class StreamEngine:
         self.detector = detector
         self.max_changed_frac = max_changed_frac
         self._geos: dict[tuple[int, int], StreamGeometry] = {}
-        self._fns: dict[tuple[int, int, int, int], object] = {}
+        self._fns: dict[tuple, object] = {}
+        # head-work accounting: how many per-level SAT builds the subset
+        # programs actually ran vs the all-level layout's total (tests and
+        # benchmarks assert fully-cached levels build no SAT from these)
+        self.sat_level_builds = 0
+        self.sat_level_total = 0
+        self.dispatches = 0
+
+    @property
+    def sat_level_frac(self) -> float:
+        """Fraction of pyramid levels whose SAT was built, over all
+        incremental dispatches (1.0 = the old all-level behaviour)."""
+        return self.sat_level_builds / max(self.sat_level_total, 1)
 
     def geometry(self, hp: int, wp: int) -> StreamGeometry:
         key = (hp, wp)
@@ -187,34 +243,41 @@ class StreamEngine:
         return min(max(int(math.ceil(total * self.max_changed_frac)), 1),
                    total)
 
-    def _cap_for(self, geo: StreamGeometry, batch: int, n_changed: int
-                 ) -> int:
-        """Smallest ladder rung holding ``n_changed`` packed windows."""
-        total = max(geo.n_slots * batch, 1)
+    def _cap_for(self, n_sub_slots: int, batch: int, n_changed: int) -> int:
+        """Smallest ladder rung holding ``n_changed`` packed windows, capped
+        at the active subset's own slot count."""
+        total = max(n_sub_slots * batch, 1)
         cap = STREAM_CAP_BASE
         while cap < n_changed:
             cap *= 2
         return min(cap, total)
 
     # ------------------------------------------------------------- build
-    def _build_fn(self, hp: int, wp: int, batch: int, cap: int):
+    def _build_fn(self, hp: int, wp: int, batch: int, cap: int,
+                  levels: tuple[int, ...]):
+        """Level-subset program: SATs are built (and the flat slot layout
+        laid out) over only the ``levels`` whose windows changed; fully
+        cached levels cost nothing — not even their SAT pass."""
         det = self.detector
         geo = self.geometry(hp, wp)
+        sub = geo.subset(levels)
         bounds = det.stage_bounds
         n_stages = det.n_stages
-        n_slots = geo.n_slots
-        lvl_of_slot = jnp.asarray(geo.lvl_of_slot)
-        y_of_slot = jnp.asarray(geo.y_of_slot)
-        x_of_slot = jnp.asarray(geo.x_of_slot)
-        sat_base_of_lvl = jnp.asarray(geo.sat_base_of_lvl)
-        sat_stride_of_lvl = jnp.asarray(geo.sat_stride_of_lvl)
+        n_slots = sub.n_slots
+        lvl_of_slot = jnp.asarray(sub.lvl_of_slot)
+        y_of_slot = jnp.asarray(sub.y_of_slot)
+        x_of_slot = jnp.asarray(sub.x_of_slot)
+        sat_base_of_lvl = jnp.asarray(sub.sat_base_of_lvl)
+        sat_stride_of_lvl = jnp.asarray(sub.sat_stride_of_lvl)
 
         def frame_fn(cascade: Cascade, stack: jax.Array,
                      mask_flat: jax.Array):
             # stack: (B, hp, wp) f32 frames; mask_flat: (B, n_slots) bool of
-            # windows to recompute (already limit-masked on host).
+            # windows to recompute (already limit-masked on host), laid out
+            # over the active subset's slots only.
             sat_parts, pair_parts = [], []
-            for lv in geo.plan:
+            for li in levels:
+                lv = geo.plan[li]
                 ys_idx = downscale_indices(hp, lv.height)
                 xs_idx = downscale_indices(wp, lv.width)
                 img_l = stack[:, ys_idx[:, None], xs_idx[None, :]]
@@ -254,41 +317,68 @@ class StreamEngine:
 
         return jax.jit(frame_fn)
 
-    def _fn(self, hp: int, wp: int, batch: int, cap: int):
-        key = (hp, wp, batch, cap)
+    def _fn(self, hp: int, wp: int, batch: int, cap: int,
+            levels: tuple[int, ...]):
+        key = (hp, wp, batch, cap, levels)
         if key not in self._fns:
-            self._fns[key] = self._build_fn(hp, wp, batch, cap)
+            self._fns[key] = self._build_fn(hp, wp, batch, cap, levels)
         return self._fns[key]
 
     # -------------------------------------------------------------- run
     def incremental(self, frames: list[np.ndarray],
                     masks_per_frame: list[list[np.ndarray]],
-                    hp: int, wp: int
+                    hp: int, wp: int,
+                    active: tuple[int, ...] | None = None
                     ) -> tuple[list[np.ndarray], np.ndarray, bool]:
         """Evaluate changed windows of a same-bucket stack of frames.
 
         ``masks_per_frame[i]`` is one flat bool mask per pyramid level for
-        frame ``i``.  Returns ``(survivor bitmaps per frame (flat n_slots),
-        recomputed-window counts, overflow)`` — on overflow (more changed
-        windows than ``cap_budget``) nothing is dispatched and the caller
-        must fall back to a full refresh.
+        frame ``i``.  The dispatch compiles (and runs) a *level-subset*
+        program keyed on the set of levels with any changed window across
+        the stack; ``active`` optionally widens that set (e.g. the serving
+        layer passes the union of its sessions' ``FramePlan.active_levels``
+        so one chunk shares one program).  Returns ``(survivor bitmaps per
+        frame (flat n_slots), recomputed-window counts, overflow)`` — on
+        overflow (more changed windows than ``cap_budget``) nothing is
+        dispatched and the caller must fall back to a full refresh.
         """
         geo = self.geometry(hp, wp)
         batch = len(frames)
+        n_levels = len(geo.plan)
         mask_flat = np.stack([np.concatenate(masks_per_frame[i])
                               for i in range(batch)])
         counts = mask_flat.sum(axis=1).astype(np.int32)
         n_changed = int(counts.sum())
         if n_changed > self.cap_budget(geo, batch):
             return [], counts, True
-        cap = self._cap_for(geo, batch, n_changed)
+        # active level subset = union over the stack of levels with any
+        # changed window (plus the caller's widening hint)
+        changed_lv = {li for li in range(n_levels)
+                      if mask_flat[:, geo.slot_offsets[li]:
+                                   geo.slot_offsets[li + 1]].any()}
+        if active is not None:
+            changed_lv |= set(active)
+        levels = tuple(sorted(changed_lv))
+        self.dispatches += 1
+        self.sat_level_builds += len(levels)
+        self.sat_level_total += n_levels
+        if not levels:          # nothing changed anywhere: no program at all
+            return ([np.zeros(geo.n_slots, bool) for _ in range(batch)],
+                    counts, False)
+        sub = geo.subset(levels)
+        mask_sub = mask_flat[:, sub.slot_indices]
+        cap = self._cap_for(sub.n_slots, batch, n_changed)
         stack = np.zeros((batch, hp, wp), np.float32)
         for i, f in enumerate(frames):
             h, w = f.shape
             stack[i, :h, :w] = f
-        out, recomputed, overflow = self._fn(hp, wp, batch, cap)(
+        out, recomputed, overflow = self._fn(hp, wp, batch, cap, levels)(
             self.detector.cascade, jnp.asarray(stack),
-            jnp.asarray(mask_flat))
-        bitmaps = np.asarray(out)
-        return ([bitmaps[i] for i in range(batch)],
-                np.asarray(recomputed), bool(np.asarray(overflow)))
+            jnp.asarray(mask_sub))
+        sub_bitmaps = np.asarray(out)
+        bitmaps = []
+        for i in range(batch):  # scatter subset survivors into full layout
+            full = np.zeros(geo.n_slots, bool)
+            full[sub.slot_indices] = sub_bitmaps[i]
+            bitmaps.append(full)
+        return (bitmaps, np.asarray(recomputed), bool(np.asarray(overflow)))

@@ -6,6 +6,10 @@ engine must cover (frames are grayscale float32, like the image corpus in
 
 - ``static_cctv``   — a fixed scene with a small non-face object patrolling
   it: the mostly-static surveillance case where tile-reuse wins big;
+- ``intermittent_cctv`` — the same scene, but the object pauses between
+  moves (one move every ``move_every`` frames): long fully-idle stretches
+  where the stream engine's cached path and the level-subset head build no
+  SATs at all — the realistic surveillance duty cycle;
 - ``moving_face``   — a face translating over a static background: changed
   tiles track the face, ground-truth boxes move with it;
 - ``lighting_drift`` — a static scene under slow global illumination drift:
@@ -26,7 +30,8 @@ from repro.core.training.data import make_background, make_face, render_scene
 
 __all__ = ["make_video", "SCENARIOS"]
 
-SCENARIOS = ("static_cctv", "moving_face", "lighting_drift", "camera_pan")
+SCENARIOS = ("static_cctv", "intermittent_cctv", "moving_face",
+             "lighting_drift", "camera_pan")
 
 
 def _empty_boxes() -> np.ndarray:
@@ -44,6 +49,25 @@ def _static_cctv(rng, n_frames, h, w, n_faces):
     for t in range(n_frames):
         f = img.copy()
         x = (x0 + t * step) % max(w - obj, 1)
+        f[y0:y0 + obj, x:x + obj] = tone
+        frames.append((f, gt.copy()))
+    return frames
+
+
+def _intermittent_cctv(rng, n_frames, h, w, n_faces, move_every=4):
+    """``static_cctv`` with a duty cycle: the object advances only every
+    ``move_every``-th frame, so most frames are bit-identical to their
+    predecessor (the fully-cached streaming case)."""
+    img, gt = render_scene(rng, h, w, n_faces=n_faces)
+    obj = int(max(6, min(h, w) // 12))
+    tone = float(rng.uniform(10, 60))
+    x0 = int(rng.integers(0, max(w - obj, 1)))
+    y0 = h - obj - 2
+    step = max(2, w // max(n_frames, 1))
+    frames = []
+    for t in range(n_frames):
+        f = img.copy()
+        x = (x0 + (t // move_every) * step) % max(w - obj, 1)
         f[y0:y0 + obj, x:x + obj] = tone
         frames.append((f, gt.copy()))
     return frames
@@ -98,6 +122,8 @@ def make_video(kind: str, n_frames: int = 16, h: int = 128, w: int = 128,
     rng = np.random.default_rng(seed)
     if kind == "static_cctv":
         return _static_cctv(rng, n_frames, h, w, n_faces)
+    if kind == "intermittent_cctv":
+        return _intermittent_cctv(rng, n_frames, h, w, n_faces)
     if kind == "moving_face":
         return _moving_face(rng, n_frames, h, w, n_faces)
     if kind == "lighting_drift":

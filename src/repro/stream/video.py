@@ -7,10 +7,13 @@ one video stream.  Per frame it:
    (the pixels the cached decisions were computed on — not simply the
    previous frame, so sub-threshold drift never compounds silently);
 2. maps changed tiles (plus a dilated halo) to the exact set of detection
-   windows whose receptive field they overlap, per pyramid level;
+   windows whose receptive field they overlap, per pyramid level; the
+   levels with any changed window form the frame's *active level subset*
+   (``FramePlan.active_levels``);
 3. re-evaluates only those windows through the packed incremental engine
-   (:class:`repro.stream.StreamEngine`) and merges the survivors into the
-   cached per-level bitmaps; everything else is reused.
+   (:class:`repro.stream.StreamEngine`), which compiles a level-subset
+   program: fully-cached levels build no SAT at all.  Survivors merge
+   into the cached per-level bitmaps; everything else is reused.
 
 Exactness: with ``threshold <= 0`` a tile is "changed" iff any pixel
 differs, so the cache always reflects the current frame's pixels exactly
@@ -85,6 +88,8 @@ class FrameStats(NamedTuple):
     tiles_changed: int             # after halo dilation
     windows_total: int             # live (limit-valid) windows, all levels
     windows_recomputed: int
+    levels_total: int = 0          # pyramid levels in the bucket's plan
+    levels_active: int = 0         # levels whose SAT/head ran this frame
 
     @property
     def tile_skip_frac(self) -> float:
@@ -94,6 +99,12 @@ class FrameStats(NamedTuple):
     def window_skip_frac(self) -> float:
         return 1.0 - self.windows_recomputed / max(self.windows_total, 1)
 
+    @property
+    def level_skip_frac(self) -> float:
+        """Fraction of pyramid levels whose dense-wave/SAT head was skipped
+        (fully cached) this frame."""
+        return 1.0 - self.levels_active / max(self.levels_total, 1)
+
 
 class FramePlan(NamedTuple):
     mode: str                      # 'full' | 'incremental' | 'cached'
@@ -101,6 +112,10 @@ class FramePlan(NamedTuple):
     changed_tiles: np.ndarray | None   # dilated tile mask
     tiles_changed: int
     windows_to_recompute: int
+    active_levels: tuple[int, ...] | None = None   # levels with changed
+    #                                windows ('incremental' plans only; the
+    #                                incremental engine builds SATs for
+    #                                exactly this subset)
 
 
 class VideoDetector:
@@ -189,8 +204,9 @@ class VideoDetector:
         n_rec = int(sum(int(m.sum()) for m in masks))
         if n_rec > cfg.full_refresh_frac * max(self._n_live, 1):
             return frame, FramePlan("full", None, changed, n_changed, n_rec)
+        active = tuple(li for li, m in enumerate(masks) if m.any())
         return frame, FramePlan("incremental", masks, changed,
-                                n_changed, n_rec)
+                                n_changed, n_rec, active)
 
     # ------------------------------------------------------------- commits
     def _decode(self) -> np.ndarray:
@@ -207,11 +223,13 @@ class VideoDetector:
         return nms.group_rectangles(rects, self.detector.config.min_neighbors)
 
     def _finish(self, frame: np.ndarray, mode: str, tiles_changed: int,
-                recomputed: int) -> tuple[np.ndarray, FrameStats]:
+                recomputed: int, levels_active: int
+                ) -> tuple[np.ndarray, FrameStats]:
         self._rects = self._decode() if mode != "cached" else self._rects
         ty, tx = tile_grid_shape(*self._shape, self.config.tile)
         stats = FrameStats(self._frame_idx, mode, ty * tx, tiles_changed,
-                           self._n_live, recomputed)
+                           self._n_live, recomputed,
+                           len(self._geo.plan), levels_active)
         self._frame_idx += 1
         return self._rects.copy(), stats
 
@@ -242,7 +260,8 @@ class VideoDetector:
         self._ref = frame.copy()
         self._last_full = self._frame_idx
         ty, tx = tile_grid_shape(*self._shape, self.config.tile)
-        return self._finish(frame, "full", ty * tx, self._n_live)
+        return self._finish(frame, "full", ty * tx, self._n_live,
+                            len(geo.plan))
 
     def commit_incremental(self, frame: np.ndarray, plan: FramePlan,
                            survivors_flat: np.ndarray
@@ -257,11 +276,12 @@ class VideoDetector:
                         tile, axis=1)[:h, :w]
         self._ref = np.where(pix, frame, self._ref)
         return self._finish(frame, "incremental", plan.tiles_changed,
-                            plan.windows_to_recompute)
+                            plan.windows_to_recompute,
+                            len(plan.active_levels or ()))
 
     def commit_cached(self, frame: np.ndarray,
                       plan: FramePlan) -> tuple[np.ndarray, FrameStats]:
-        return self._finish(frame, "cached", plan.tiles_changed, 0)
+        return self._finish(frame, "cached", plan.tiles_changed, 0, 0)
 
     # -------------------------------------------------------------- public
     def process(self, frame) -> tuple[np.ndarray, FrameStats]:
@@ -277,7 +297,8 @@ class VideoDetector:
             return self.commit_full(frame)
         geo = self._geo
         bitmaps, _rec, overflow = self.engine.incremental(
-            [frame], [plan.masks], geo.hp, geo.wp)
+            [frame], [plan.masks], geo.hp, geo.wp,
+            active=plan.active_levels)
         if overflow:   # too many changed windows for the packed capacity
             return self.commit_full(frame)
         return self.commit_incremental(frame, plan, bitmaps[0])

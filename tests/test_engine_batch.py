@@ -156,6 +156,54 @@ def test_detect_batch_raw_levelresults(det, images):
                               np.asarray(sres.alive_counts))
 
 
+# ------------------------------------------------------- pallas batched head
+PKW = dict(step=1, scale_factor=1.4, min_neighbors=2)
+
+
+@pytest.fixture(scope="module")
+def pallas_dets():
+    """(oracle, pallas) detector pair — step=1 so the tile kernel engages."""
+    return (Detector(CASC, EngineConfig(mode="wave", **PKW)),
+            Detector(CASC, EngineConfig(mode="wave", use_pallas=True, **PKW)))
+
+
+def test_packed_batch_pallas_bit_identical(pallas_dets, images):
+    """detect_batch(strategy='packed') with use_pallas=True must be
+    bit-identical to the gather-oracle path on the test corpus."""
+    oracle, pallas = pallas_dets
+    got = pallas.detect_batch(images, strategy="packed")
+    want = oracle.detect_batch(images, strategy="packed")
+    for g, w in zip(got, want):
+        assert np.array_equal(g, w)
+
+
+def test_packed_batch_pallas_matches_single(pallas_dets, images):
+    """The kernelized batched head stays bit-identical per image to the
+    (kernelized) single-image detect."""
+    _, pallas = pallas_dets
+    batched = pallas.detect_batch(images[:2], strategy="packed")
+    for im, b in zip(images[:2], batched):
+        assert np.array_equal(pallas.detect(im), b)
+
+
+def test_packed_batch_pallas_mixed_valid_hw(pallas_dets):
+    """Mixed true shapes inside one pad bucket: the limit masks (dynamic
+    valid_hw) must compose with the kernelized dense waves."""
+    rng = np.random.default_rng(23)
+    shapes = [(64, 64), (52, 60), (60, 45)]
+    imgs = [render_scene(rng, h, w, n_faces=1)[0] for h, w in shapes]
+    kw = dict(mode="wave", pad_multiple=64, **PKW)
+    oracle = Detector(CASC, EngineConfig(**kw))
+    pallas = Detector(CASC, EngineConfig(use_pallas=True, **kw))
+    # one bucket: every image pads up to (64, 64)
+    assert {oracle._bucket_hw(*im.shape) for im in imgs} == {(64, 64)}
+    got = pallas.detect_batch(imgs, strategy="packed")
+    want = oracle.detect_batch(imgs, strategy="packed")
+    for g, w, im in zip(got, want, imgs):
+        assert np.array_equal(g, w)
+        assert np.array_equal(g, oracle.detect(im))
+
+
 # ------------------------------------------------------------- properties
 @settings(max_examples=5, deadline=None)
 @given(seed=st.integers(0, 10_000))

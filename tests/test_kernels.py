@@ -2,6 +2,7 @@
 interpret mode (CPU container; kernels target TPU BlockSpec tiling)."""
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -63,3 +64,73 @@ def test_integral_image_property_last_cell_is_total():
                                        interpret=True))
     assert abs(ii[-1, -1] - img.sum()) < 1e-2 * img.size
     assert (ii[0] == 0).all() and (ii[:, 0] == 0).all()
+
+
+# ------------------------------------------------------------------ batched
+def _batch_inputs(b, h, w, seed=0):
+    rng = np.random.default_rng(seed)
+    imgs = jnp.asarray(rng.integers(0, 255, (b, h, w)).astype(np.float32))
+    ii, pair = jax.vmap(integral_images)(imgs)
+    return imgs, ii, pair
+
+
+@pytest.mark.parametrize("stage", range(CASC.n_stages))
+def test_dense_stage_sums_all_stages_match_ref(stage):
+    """Kernel-vs-oracle across *every* cascade stage, on a grid that is not
+    tile-aligned in either dimension (ny=17, nx=33 vs the (8, 128) tile)."""
+    h, w = 40, 56
+    rng = np.random.default_rng(7 * (stage + 1))
+    img = jnp.asarray(rng.integers(0, 255, (h, w)).astype(np.float32))
+    ii, ii_pair = integral_images(img)
+    ny, nx = h - 24 + 1, w - 24 + 1
+    inv = ops.window_inv_sigma_grid(ii_pair, ny, nx, use_kernel=False)
+    got = ops.dense_stage_sums(CASC, CASC, stage, ii, inv, interpret=True)
+    want = ops.dense_stage_sums_ref(CASC, CASC, stage, ii, inv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_integral_image_batch_matches_ref():
+    imgs, _, _ = _batch_inputs(3, 37, 61)     # non-tile-aligned H and W
+    got = ops.integral_image_batch(imgs, interpret=True, use_kernel=True)
+    want = ops.integral_image_batch(imgs, use_kernel=False)
+    assert got.shape == (3, 38, 62)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=2.0)
+    # per-slice equal to the single-image wrapper (same contract)
+    for i in range(3):
+        one = ops.integral_image(imgs[i], interpret=True, use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(one))
+
+
+def test_window_inv_sigma_batch_matches_ref():
+    _, _, pair = _batch_inputs(2, 45, 70, seed=3)
+    ny, nx = 45 - 24 + 1, 70 - 24 + 1
+    got = ops.window_inv_sigma_grid_batch(pair, ny, nx, use_kernel=True,
+                                          interpret=True)
+    want = ops.window_inv_sigma_grid_batch(pair, ny, nx, use_kernel=False)
+    assert got.shape == (2, ny, nx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+    for i in range(2):
+        one = ops.window_inv_sigma_grid(pair[i], ny, nx, use_kernel=True,
+                                        interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(one))
+
+
+@pytest.mark.parametrize("stage", range(CASC.n_stages))
+def test_dense_stage_sums_batch_all_stages_match_ref(stage):
+    _, ii, pair = _batch_inputs(2, 40, 56, seed=stage)
+    ny, nx = 40 - 24 + 1, 56 - 24 + 1
+    inv = ops.window_inv_sigma_grid_batch(pair, ny, nx, use_kernel=False)
+    got = ops.dense_stage_sums_batch(CASC, CASC, stage, ii, inv,
+                                     interpret=True)
+    want = ops.dense_stage_sums_batch_ref(CASC, CASC, stage, ii, inv)
+    assert got.shape == (2, ny, nx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+    # each slice bit-equal to the single-image kernel (batch = vmap of it)
+    for i in range(2):
+        one = ops.dense_stage_sums(CASC, CASC, stage, ii[i], inv[i],
+                                   interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(one))

@@ -23,27 +23,44 @@ OUTLIER = np.asarray([[100, 100, 10, 10]])
 RECTS = np.concatenate([CLUSTER_A, CLUSTER_B, OUTLIER])
 
 
-def test_golden_clusters_min_neighbors_3():
-    got = group_rectangles(RECTS, min_neighbors=3)
+def test_golden_clusters_min_neighbors_2():
+    """mn=2 keeps clusters with > 2 members: A (4) and B (3), not the
+    singleton outlier."""
+    got = group_rectangles(RECTS, min_neighbors=2)
     want = np.rint(np.stack([CLUSTER_A.mean(axis=0).astype(np.float64),
                              CLUSTER_B.mean(axis=0).astype(np.float64)])
                    ).astype(np.int32)
     assert np.array_equal(got, want)
 
 
-def test_min_neighbors_4_drops_small_cluster():
-    got = group_rectangles(RECTS, min_neighbors=4)
+def test_min_neighbors_3_drops_exact_size_cluster():
+    """OpenCV parity: groupRectangles keeps a cluster iff its size is
+    *strictly greater* than groupThreshold — a cluster of exactly
+    ``min_neighbors`` members (B, 3 rects at mn=3) must be dropped."""
+    got = group_rectangles(RECTS, min_neighbors=3)
     want = np.rint(CLUSTER_A.mean(axis=0)).astype(np.int32)[None]
     assert np.array_equal(got, want)
 
 
-@pytest.mark.parametrize("mn", [0, 1])
-def test_min_neighbors_edge_keeps_everything(mn):
-    """mn=0 keeps all clusters incl. singletons; mn=1 keeps size>=1, i.e.
-    also everything — the documented OpenCV-mirroring edge semantics."""
-    got = group_rectangles(RECTS, min_neighbors=mn)
+def test_min_neighbors_4_drops_exact_size_cluster():
+    """A cluster of exactly min_neighbors members (A, 4 rects at mn=4) is
+    dropped too — nothing survives."""
+    got = group_rectangles(RECTS, min_neighbors=4)
+    assert got.shape == (0, 4)
+
+
+def test_min_neighbors_0_keeps_everything():
+    """mn=0 keeps every cluster including singletons (size >= 1)."""
+    got = group_rectangles(RECTS, min_neighbors=0)
     assert len(got) == 3                     # A, B, and the outlier cluster
     assert np.rint(OUTLIER[0]).astype(np.int32).tolist() in got.tolist()
+
+
+def test_min_neighbors_1_drops_singletons():
+    """mn=1 requires >= 2 members: the singleton outlier is dropped."""
+    got = group_rectangles(RECTS, min_neighbors=1)
+    assert len(got) == 2
+    assert np.rint(OUTLIER[0]).astype(np.int32).tolist() not in got.tolist()
 
 
 def test_empty_input():
@@ -54,9 +71,11 @@ def test_empty_input():
 def test_transitive_chaining_forms_one_cluster():
     """a~b and b~c but a!~c still union into a single cluster."""
     chain = np.asarray([[0, 0, 20, 20], [4, 0, 20, 20], [8, 0, 20, 20]])
-    got = group_rectangles(chain, min_neighbors=3)
+    got = group_rectangles(chain, min_neighbors=2)
     assert len(got) == 1
     assert np.array_equal(got[0], np.rint(chain.mean(axis=0)).astype(np.int32))
+    # ...but the 3-member chain does not survive mn=3 (needs > 3 members)
+    assert group_rectangles(chain, min_neighbors=3).shape == (0, 4)
 
 
 # ------------------------------------------------------------------ batched

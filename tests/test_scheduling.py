@@ -116,6 +116,34 @@ def test_replan_on_straggle_triggers_only_on_drift():
     assert sum(new.shares) == 256
 
 
+@settings(max_examples=25, deadline=None)
+@given(n_q=st.integers(1, 64), quantum=st.sampled_from([2, 4, 8]),
+       slow=st.floats(0.1, 0.6))
+def test_replan_on_straggle_preserves_quantum(n_q, quantum, slow):
+    """A plan built with quantum=k must be re-planned with quantum=k: every
+    replanned share stays a multiple of the quantum (up to the leftover
+    that the original total itself didn't divide)."""
+    n = n_q * quantum
+    plan = rate_weighted_split(n, [1.0, 1.0, 1.0], quantum=quantum)
+    assert plan.quantum == quantum
+    new = replan_on_straggle(plan, [1.0, 1.0, slow])
+    assert new is not None
+    assert new.quantum == quantum
+    assert sum(new.shares) == n
+    assert all(s % quantum == 0 for s in new.shares)
+
+
+def test_straggler_detector_replan_inherits_quantum():
+    from repro.distributed.fault import StragglerDetector
+    plan = rate_weighted_split(64, [1.0, 1.0], quantum=4)
+    det = StragglerDetector(n_pods=2, ewma=0.0)
+    det.update([1.0, 10.0])                  # pod1 is 10x slower
+    new = det.replan(plan)
+    assert new is not None
+    assert new.quantum == 4
+    assert all(s % 4 == 0 for s in new.shares)
+
+
 def test_workmodel_profile_consistency():
     wm = WorkModel.geometric(SIZES, rate=0.5)
     full = wm.segment_work(1000, 0, len(SIZES))

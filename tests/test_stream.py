@@ -211,6 +211,91 @@ def test_sub_window_stream_is_empty(det, engine):
         assert rects.shape == (0, 4)
 
 
+# ------------------------------------------------------- level subsetting
+def test_incremental_plan_reports_active_levels(det, engine):
+    video = make_video("static_cctv", n_frames=2, h=HW, w=HW, seed=2)
+    vd = _stream(det, engine, tile=12, threshold=0.0, keyframe_interval=0)
+    vd.process(video[0][0])
+    _frame, plan = vd.plan_frame(video[1][0])
+    assert plan.mode == "incremental"
+    want = tuple(li for li, m in enumerate(plan.masks) if m.any())
+    assert plan.active_levels == want
+    assert len(plan.active_levels) >= 1
+
+
+def test_fully_cached_levels_build_no_sat(det):
+    """Padded bucket: a 48-row frame in a 64-row bucket has zero live
+    windows at the coarsest pyramid level (its windows would sample padded
+    pixels), so the level-subset engine must never build that level's SAT —
+    and results must stay bit-identical to per-frame detect."""
+    pad_det = Detector(CASC, EngineConfig(mode="wave", pad_multiple=64, **KW))
+    engine = StreamEngine(pad_det, StreamConfig().max_changed_frac)
+    video = make_video("static_cctv", n_frames=3, h=48, w=64, seed=6)
+    vd = VideoDetector(pad_det, StreamConfig(tile=12, threshold=0.0,
+                                             keyframe_interval=0,
+                                             full_refresh_frac=1.1),
+                       engine=engine)
+    geo = engine.geometry(64, 64)
+    dead = [li for li, (y_lim, _x) in enumerate(geo.limits(48, 64))
+            if y_lim < 0]
+    assert dead, "fixture must have at least one dead (fully-cached) level"
+    n_incr = 0
+    for i, (frame, _gt) in enumerate(video):
+        before = engine.sat_level_builds
+        rects, st = vd.process(frame)
+        assert np.array_equal(rects, pad_det.detect(frame))
+        if st.mode == "incremental":
+            n_incr += 1
+            built = engine.sat_level_builds - before
+            # the dead level(s) never reach the head; the subset is smaller
+            # than the full plan
+            assert built == st.levels_active <= len(geo.plan) - len(dead)
+            assert st.level_skip_frac > 0
+    assert n_incr >= 1
+
+
+def test_cached_frame_builds_no_sat(det, engine):
+    """A bit-identical frame dispatches nothing: zero head invocations."""
+    frame = make_video("static_cctv", n_frames=1, h=HW, w=HW, seed=3)[0][0]
+    vd = _stream(det, engine, tile=16, threshold=0.0, keyframe_interval=0)
+    vd.process(frame)
+    before = (engine.sat_level_builds, engine.dispatches)
+    _rects, st = vd.process(frame)
+    assert st.mode == "cached"
+    assert st.levels_active == 0 and st.level_skip_frac == 1.0
+    assert (engine.sat_level_builds, engine.dispatches) == before
+
+
+def test_empty_masks_incremental_is_noop(det, engine):
+    """All-false masks (no changed windows anywhere) short-circuit: no
+    program, empty survivor bitmaps."""
+    geo = engine.geometry(HW, HW)
+    masks = [np.zeros(ny * nx, bool) for (ny, nx) in geo.level_windows]
+    frame = np.zeros((HW, HW), np.float32)
+    before = engine.sat_level_builds
+    bitmaps, counts, overflow = engine.incremental(
+        [frame], [masks], HW, HW)
+    assert not overflow
+    assert engine.sat_level_builds == before
+    assert counts.sum() == 0
+    assert len(bitmaps) == 1 and not bitmaps[0].any()
+
+
+def test_intermittent_stream_level_sat_frac(det, engine):
+    """Mostly-idle stream: averaged over frames, fewer than half the
+    pyramid levels' SATs are built, and output stays bit-identical."""
+    video = make_video("intermittent_cctv", n_frames=8, h=HW, w=HW, seed=4)
+    vd = _stream(det, engine, tile=12, threshold=0.0, keyframe_interval=0)
+    fracs = []
+    for i, (frame, _gt) in enumerate(video):
+        rects, st = vd.process(frame)
+        assert np.array_equal(rects, det.detect(frame))
+        if i > 0:
+            fracs.append(st.levels_active / max(st.levels_total, 1))
+            assert st.mode in ("cached", "incremental")
+    assert np.mean(fracs) < 0.5, fracs
+
+
 # ------------------------------------------------------------- batch path
 def test_batched_incremental_matches_single(det, engine):
     """Concurrent streams' changed windows share one packed compaction;
