@@ -91,6 +91,69 @@ def run(n_images: int = 5, hw: int = 128, fast: bool = False) -> list[dict]:
                        f"head_s={head_s:.3f} tail_s={full_s - head_s:.3f}"),
             "TP": "-", "FP": "-", "FN": "-", "total_error": "-",
             "precision": "-", "recall": "-", "wall_s": full_s})
+
+    rows.extend(_crossover_rows(casc, scenes, imgs, fast))
+    return rows
+
+
+def _crossover_rows(casc, scenes, imgs, fast: bool) -> list[dict]:
+    """Packed-tail crossover sweep (density vs per-backend time) + the
+    forced-backend / auto comparison on the real batched engine.
+
+    The pretrained cascade's default wave plan covers every stage with
+    dense waves, so this section uses ``dense_segments=(1,)`` — one dense
+    wave, then a genuine packed tail over the remaining stages — which is
+    also the shape the streaming engine runs (tail-only)."""
+    from repro.core import Detector, EngineConfig
+
+    def _empty(system, wall):
+        return {"system": system, "TP": "-", "FP": "-", "FN": "-",
+                "total_error": "-", "precision": "-", "recall": "-",
+                "wall_s": wall}
+
+    sizes = (128, 2048) if fast else (128, 512, 2048, 8192)
+    base = Detector(casc, EngineConfig(
+        mode="wave", step=1, scale_factor=1.2, min_neighbors=2,
+        dense_segments=(1,)))
+    auto = base.calibrated(scenes[0][0], safety=3.0, tune_tail=True,
+                           tail_sizes=sizes)
+    tail = auto.cal_profile["tail"]
+    rows = []
+    for i, size in enumerate(tail["sizes"]):
+        dens = size / tail["n_windows"]
+        g, b, p = (tail["ms"][k][i] for k in ("gather", "bulk", "pallas"))
+        rows.append(_empty(
+            f"tail sweep n={size} density={dens:.3f} gather={g:.2f}ms "
+            f"bulk={b:.2f}ms pallas={p:.2f}ms -> {tail['rungs'][i][1]}",
+            min(g, b, p) / 1e3))
+    rows.append(_empty(
+        f"tail crossover: pallas from n>={tail['crossover']} "
+        f"(density {tail['crossover'] / tail['n_windows']:.3f}); "
+        f"rungs={tail['rungs']}", 0.0))
+
+    # forced backends vs the calibrated auto ladder on detect_batch B=8
+    want = auto.detect_batch(imgs, strategy="packed")       # warm auto
+    times = {}
+    for bk in ("gather", "bulk", "pallas"):
+        d = Detector(casc, auto.config._replace(tail_backend=bk))
+        out = d.detect_batch(imgs, strategy="packed")       # warm + check
+        same = all(np.array_equal(a, o) for a, o in zip(want, out))
+        with Timer() as t:
+            d.detect_batch(imgs, strategy="packed")
+        times[bk] = t.seconds
+        rows.append(_empty(
+            f"batched tail backend={bk} B=8 (identical={same})", t.seconds))
+    with Timer() as t:
+        auto.detect_batch(imgs, strategy="packed")
+    times["auto"] = t.seconds
+    best = min(times[b] for b in ("gather", "bulk", "pallas"))
+    ratio = times["auto"] / max(best, 1e-9)
+    rows.append(_empty(
+        f"batched tail backend=auto B=8 (vs best fixed: {ratio:.2f}x)",
+        times["auto"]))
+    if ratio > 1.05:
+        print(f"WARNING: auto tail backend {ratio:.2f}x slower than best "
+              f"fixed backend (>1.05x)")
     return rows
 
 

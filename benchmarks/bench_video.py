@@ -95,12 +95,32 @@ def run(n_frames: int = 24, hw: int = 160, fast: bool = False) -> list[dict]:
                                       scale_factor=1.25, min_neighbors=2))
     from repro.stream import make_video, StreamEngine, StreamConfig
     probe = make_video("static_cctv", n_frames=1, h=hw, w=hw, seed=3)[0][0]
-    det = det.calibrated(probe)
+    # tune_tail races the packed-tail backends and persists the crossover
+    # ladder; the stream engine's rung-sized programs then pick gather vs
+    # packed-kernel per dispatch from it
+    det = det.calibrated(probe, tune_tail=True,
+                         tail_sizes=(128, 1024) if fast
+                         else (128, 512, 2048, 8192))
+    print(f"packed-tail rungs: {det.config.tail_rungs} "
+          f"(pallas from n>={det.cal_profile['tail']['crossover']})")
     engine = StreamEngine(det, StreamConfig().max_changed_frac)
     rows = []
     for kind, threshold, tile, keyframe in SCENARIOS:
         rows.append(_run_scenario(det, engine, kind, threshold, tile,
                                   keyframe, n_frames, hw))
+    for row in rows:
+        row["tail"] = "auto"
+    # the same stream forced through the packed-window kernel: exactness of
+    # the kernelized incremental path on a real scenario (speed is the
+    # ladder's business — this row shows the kernel is safe to pick)
+    det_k = det.__class__(det.cascade,
+                          det.config._replace(tail_backend="pallas"))
+    eng_k = StreamEngine(det_k, StreamConfig().max_changed_frac)
+    row = _run_scenario(det_k, eng_k, "static_cctv", 0.0, 16, 0,
+                        n_frames, hw)
+    row["scenario"] = "static_cctv (tail=pallas)"
+    row["tail"] = "pallas"
+    rows.append(row)
     return rows
 
 
@@ -117,6 +137,9 @@ def main(fast: bool = False):
     assert inter["lvl_sat_frac"] < 0.5, (
         f"mostly-idle stream should build SATs for < 50% of pyramid levels "
         f"per frame, got {inter['lvl_sat_frac']:.2f}")
+    kern = rows[-1]
+    assert kern["tail"] == "pallas" and kern["exact"] is True, \
+        "packed-window-kernel streaming must be bit-exact"
     return rows
 
 

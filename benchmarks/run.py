@@ -1,12 +1,19 @@
 """Benchmark harness: one module per paper table/figure (+ TPU extras).
 
     python -m benchmarks.run [--fast] [--only bench_rit,bench_dvfs]
+                             [--artifacts DIR]
+
+``--artifacts DIR`` additionally writes one machine-readable
+``BENCH_<name>.json`` per benchmark that returned rows — CI points it at
+the repo root so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import time
 import traceback
 
@@ -29,6 +36,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--artifacts", default=None, metavar="DIR",
+                    help="write BENCH_<name>.json per benchmark into DIR")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -40,8 +49,10 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            mod.main(fast=args.fast)
+            rows = mod.main(fast=args.fast)
             print(f"[{name} done in {time.time() - t0:.1f}s]")
+            if args.artifacts and rows is not None:
+                _write_artifact(args.artifacts, name, args.fast, rows)
         except Exception:                                # noqa: BLE001
             traceback.print_exc()
             failures.append(name)
@@ -49,6 +60,17 @@ def main() -> None:
                   f"FAILURES: {failures}"))
     if failures:
         raise SystemExit(1)
+
+
+def _write_artifact(out_dir: str, name: str, fast: bool, rows) -> None:
+    short = name.removeprefix("bench_")
+    path = os.path.join(out_dir, f"BENCH_{short}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "fast": fast,
+                   "written_at": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                               time.gmtime()),
+                   "rows": rows}, f, indent=1, default=float)
+    print(f"[artifact: {path}]")
 
 
 if __name__ == "__main__":

@@ -13,13 +13,16 @@ python -m pytest -x -q
 echo "=== lint: dead stores (assignments overwritten before use) ==="
 python scripts/check_dead_stores.py src tests benchmarks scripts examples
 
-echo "=== smoke: bench_detector (ref/dense vs ours + pallas batched head, fast) ==="
-python -m benchmarks.run --fast --only bench_detector
+echo "=== smoke: packed-tail crossover (pallas == gather oracle, bit-exact) ==="
+python scripts/crossover_smoke.py
+
+echo "=== smoke: bench_detector (batched head + packed-tail crossover, fast) ==="
+python -m benchmarks.run --fast --only bench_detector --artifacts .
 
 echo "=== smoke: bench_rit (content/RIT relation, fast) ==="
 python -m benchmarks.run --fast --only bench_rit
 
-echo "=== smoke: bench_video (streaming tile-reuse + level-subset skip, fast) ==="
-python -m benchmarks.run --fast --only bench_video
+echo "=== smoke: bench_video (tile-reuse + level skip + tail rungs, fast) ==="
+python -m benchmarks.run --fast --only bench_video --artifacts .
 
 echo "CI OK"

@@ -23,12 +23,16 @@ The first (densest) waves can run through the Pallas tile kernel
 (``repro.kernels.ops.dense_stage_sums``) — on the single-image path *and*
 on the packed batched head, which routes per-level dense waves through the
 batched wrapper ``dense_stage_sums_batch`` (one dispatch per (stage,
-level) over the whole stack); later segments use the gather-based oracle
-on the compacted window list, where a dense tile kernel would waste
-lanes.  Kernelized and oracle paths are verified bit-identical on the
-test corpus (interpret mode).  This hybrid is the SIMD re-expression of
-the paper's "balance between parallelism and optimal computational
-workload".
+level) over the whole stack); later segments run the compacted window
+list through the shared packed-tail evaluator
+(``repro.kernels.packed_tail``), whose backend — fori-loop gather, bulk
+gather, or the blocked packed-window Pallas kernel — is chosen per
+capacity rung by the measured crossover ladder
+(``EngineConfig.tail_rungs``, see ``Detector.calibrated``).  All backends
+and the dense kernels are verified bit-identical on the test corpus
+(interpret mode).  This dense/packed/gather spectrum is the SIMD
+re-expression of the paper's "balance between parallelism and optimal
+computational workload".
 
 Batching (serving scale)
 ------------------------
@@ -67,11 +71,10 @@ from .integral import integral_images, window_inv_sigma
 from .features import stage_sum_windows
 from .pyramid import pyramid_plan, downscale_nearest, downscale_indices
 from . import nms
+from repro.kernels import packed_tail
 
 __all__ = ["EngineConfig", "LevelResult", "BatchResult", "Detector",
            "calibrate_capacities"]
-
-_AREA = float(WINDOW * WINDOW)
 
 # static-shape floor of every compaction capacity: keeps `nonzero(size=...)`
 # shapes sane for tiny levels, and is exactly the per-(image, level) lane
@@ -101,6 +104,16 @@ class EngineConfig(NamedTuple):
     #                                as fractions of the whole batch's window
     #                                count; () = fall back to capacity_fracs,
     #                                else the conservative auto schedule
+    tail_backend: str = "auto"     # packed-tail evaluator: 'gather' | 'bulk'
+    #                                | 'pallas' forces one backend; 'auto'
+    #                                walks the calibrated tail_rungs ladder
+    #                                (empty ladder = 'bulk')
+    tail_rungs: tuple = ()         # measured kernel-vs-gather crossover
+    #                                ladder ((max_windows, backend), ...)
+    #                                ascending, persisted by
+    #                                Detector.calibrated(tune_tail=True) so
+    #                                batch, stream and serving inherit one
+    #                                decision
 
 
 class LevelResult(NamedTuple):
@@ -162,41 +175,6 @@ def _window_limits(h_valid, w_valid, level_h: int, level_w: int,
     return y_lim, x_lim
 
 
-def _packed_stage_sum(cascade: Cascade, ii_flat: jax.Array, img: jax.Array,
-                      base: jax.Array, stride: jax.Array, ys: jax.Array,
-                      xs: jax.Array, inv_sigma: jax.Array, k0, k1) -> jax.Array:
-    """Stage sum over a *packed* window list whose entries live on different
-    images and pyramid levels.  ``ii_flat`` is (B, sum_l (h_l+1)*(w_l+1)) —
-    every level's SAT flattened and concatenated, so no level is padded to
-    the bucket resolution; ``base``/``stride`` are each window's level SAT
-    offset and row stride.  Per-window arithmetic matches
-    ``features.stage_sum_windows`` bit-for-bit — same rectangle accumulation
-    order, same normalization — only the SAT lookup is through the packed
-    (img, base + y*stride + x) indexing."""
-
-    def rect(y0, x0, rh, rw):
-        y1, x1 = y0 + rh, x0 + rw
-        return (ii_flat[img, base + y1 * stride + x1]
-                - ii_flat[img, base + y0 * stride + x1]
-                - ii_flat[img, base + y1 * stride + x0]
-                + ii_flat[img, base + y0 * stride + x0])
-
-    def body(k, acc):
-        rects = jax.lax.dynamic_index_in_dim(cascade.rect_xywh, k, 0, False)
-        w = jax.lax.dynamic_index_in_dim(cascade.rect_w, k, 0, False)
-        feat = jnp.zeros_like(ys, jnp.float32)
-        for r in range(rects.shape[0]):
-            rx, ry, rw, rh = rects[r, 0], rects[r, 1], rects[r, 2], rects[r, 3]
-            feat = feat + w[r] * rect(ys + ry, xs + rx, rh, rw)
-        f_norm = feat * inv_sigma / _AREA
-        vote = jnp.where(f_norm < cascade.wc_threshold[k],
-                         cascade.left_val[k], cascade.right_val[k])
-        return acc + vote
-
-    init = jnp.zeros_like(ys, jnp.float32)
-    return jax.lax.fori_loop(k0, k1, body, init)
-
-
 class Detector:
     """Multi-scale face detector over one cascade.
 
@@ -210,10 +188,39 @@ class Detector:
         self.config = config
         self.stage_bounds = tuple(int(o) for o in np.asarray(cascade.stage_offsets))
         self.n_stages = cascade.n_stages
+        self._validate_config()
+        self.cal_profile: dict = {}      # set by calibrated() on its result
         self._raw_level_fns: dict = {}   # (h, w) -> unjitted level fn
         self._level_fns: dict = {}       # (h, w) -> jitted level fn
         self._vmap_level_fns: dict = {}  # (h, w, B) -> jit(vmap(level fn))
         self._batch_fns: dict = {}       # (Hp, Wp, B) -> packed batch fn
+
+    def _validate_config(self) -> None:
+        """Fail fast on malformed capacity schedules / tail policy instead
+        of a downstream shape error deep inside a jitted program."""
+        cfg = self.config
+        n_comp = max(sum(1 for (_, _, d) in self._segments() if not d), 1)
+        for name, fracs in (("capacity_fracs", cfg.capacity_fracs),
+                            ("batch_capacity_fracs", cfg.batch_capacity_fracs)):
+            if not fracs:
+                continue                 # () = auto schedule
+            if len(fracs) != n_comp:
+                raise ValueError(
+                    f"EngineConfig.{name} has {len(fracs)} entries but the "
+                    f"segment plan performs {n_comp} compaction(s) "
+                    f"(mode={cfg.mode!r}, dense_segments={cfg.dense_segments}"
+                    f", compact_every={cfg.compact_every}, "
+                    f"n_stages={self.n_stages})")
+            bad = [f for f in fracs if not (0.0 < float(f) <= 1.0)]
+            if bad:
+                raise ValueError(
+                    f"EngineConfig.{name} entries must lie in (0, 1], "
+                    f"got {bad} in {tuple(fracs)}")
+        if cfg.tail_backend not in packed_tail.BACKENDS + ("auto",):
+            raise ValueError(
+                f"EngineConfig.tail_backend must be one of "
+                f"{packed_tail.BACKENDS + ('auto',)}, got "
+                f"{cfg.tail_backend!r}")
 
     # ---------------------------------------------------------------- plan
     def _segments(self) -> list[tuple[int, int, bool]]:
@@ -553,10 +560,10 @@ class Detector:
             inv_sel = jnp.take(inv_flat, sel)
 
             for ki, (s0, s1) in enumerate(tail_segs):
+                seg_cap = shared_caps[min(ki, len(shared_caps) - 1)]
                 if ki > 0:  # recompact the shrinking shared list
-                    cap = shared_caps[min(ki, len(shared_caps) - 1)]
-                    overflow = overflow | (valid.sum() > cap)
-                    idx = jnp.nonzero(valid, size=cap, fill_value=-1)[0]
+                    overflow = overflow | (valid.sum() > seg_cap)
+                    idx = jnp.nonzero(valid, size=seg_cap, fill_value=-1)[0]
                     sel = jnp.maximum(idx, 0)
                     b_sel = jnp.take(b_sel, sel)
                     lvl_sel = jnp.take(lvl_sel, sel)
@@ -566,12 +573,16 @@ class Detector:
                     valid = idx >= 0
                 base_sel = jnp.take(sat_base_of_lvl, lvl_sel)
                 stride_sel = jnp.take(sat_stride_of_lvl, lvl_sel)
-                for s in range(s0, s1):
-                    k0, k1 = bounds[s], bounds[s + 1]
-                    ss = _packed_stage_sum(cascade, ii_flat, b_sel, base_sel,
-                                           stride_sel, y_sel, x_sel, inv_sel,
-                                           k0, k1)
-                    valid = valid & (ss >= cascade.stage_threshold[s])
+                # whole segment in one evaluator call: backend picked per
+                # capacity rung by the calibrated crossover ladder (stage
+                # thresholds still gate survivor counts per stage below)
+                ss_run = packed_tail.stage_sums(
+                    cascade, cascade_static, s0, s1, ii_flat, b_sel,
+                    base_sel, stride_sel, y_sel, x_sel, inv_sel,
+                    backend=packed_tail.select_backend(cfg, seg_cap),
+                    interpret=cfg.interpret)
+                for j, s in enumerate(range(s0, s1)):
+                    valid = valid & (ss_run[j] >= cascade.stage_threshold[s])
                     per_img = jnp.zeros((batch,), jnp.int32).at[b_sel].add(
                         valid.astype(jnp.int32))
                     counts = counts.at[s].add(per_img)
@@ -707,7 +718,9 @@ class Detector:
         return out
 
     # ---------------------------------------------------------- calibration
-    def calibrated(self, image, safety: float = 2.0) -> "Detector":
+    def calibrated(self, image, safety: float = 2.0,
+                   tune_tail: bool = False,
+                   tail_sizes: tuple | None = None) -> "Detector":
         """Profile-guided detector: run once on ``image`` with the current
         (conservative) capacities, measure survivors at each compaction
         boundary, and return a new :class:`Detector` whose
@@ -715,7 +728,16 @@ class Detector:
         ``safety`` multiplier.  The batched engine's shared capacities
         (``batch_capacity_fracs``) are calibrated from the *summed* survivor
         counts across levels, which is what turns the packed tail into a
-        real speedup (see ``benchmarks/bench_serving.py``)."""
+        real speedup (see ``benchmarks/bench_serving.py``).
+
+        With ``tune_tail=True`` the packed-tail backends are additionally
+        *raced* at capacity-ladder sizes (``packed_tail.measure_rungs``)
+        and the winners persisted in ``EngineConfig.tail_rungs``, so every
+        consumer of the config — batched detection, the streaming engine's
+        rung-sized programs, and the serving layer — inherits the measured
+        kernel-vs-gather crossover.  The returned detector's
+        ``cal_profile`` records the per-compaction survivor densities and
+        the timing sweep for benchmarks to report."""
         h, w = np.asarray(image).shape
         _, _, plan = self._padded_plan(h, w)
         levels = self.detect_raw(image)
@@ -737,10 +759,21 @@ class Detector:
                 fracs[k] = max(fracs[k], survivors / nwin)
                 surv_tot[k] += survivors
         # same safety shaping as calibrate_capacities, on both schedules
+        densities = (surv_tot / max(win_tot, 1)).tolist()
         fracs = calibrate_capacities(fracs, 1, safety)
         batch_fracs = calibrate_capacities(surv_tot, win_tot, safety)
-        return Detector(self.cascade, self.config._replace(
-            capacity_fracs=fracs, batch_capacity_fracs=batch_fracs))
+        cfg = self.config._replace(capacity_fracs=fracs,
+                                   batch_capacity_fracs=batch_fracs)
+        profile: dict = {"densities": densities, "n_windows": int(win_tot)}
+        if tune_tail:
+            kw = {} if tail_sizes is None else {"sizes": tuple(tail_sizes)}
+            tail = packed_tail.measure_rungs(
+                self.cascade, interpret=self.config.interpret, **kw)
+            cfg = cfg._replace(tail_backend="auto", tail_rungs=tail["rungs"])
+            profile["tail"] = tail
+        det = Detector(self.cascade, cfg)
+        det.cal_profile = profile
+        return det
 
     # ------------------------------------------------------------- analysis
     def work_profile(self, image) -> dict:

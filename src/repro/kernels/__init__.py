@@ -3,5 +3,7 @@
 #   haar_stage       — stage/weak-classifier eval (evalWeakClassifier +
 #                      runCascadeClassifier, 83-85%)
 #   window_variance  — per-window normalization (int_sqrt, 11-13%)
-# ops.py = jit'd wrappers; ref.py = pure-jnp oracles.
-from . import ops, ref  # noqa: F401
+# ops.py = jit'd wrappers; ref.py = pure-jnp oracles; packed_tail.py = the
+# shared compacted-tail evaluator (gather / bulk / pallas backends + the
+# measured kernel-vs-gather crossover ladder).
+from . import ops, packed_tail, ref  # noqa: F401

@@ -19,10 +19,12 @@ from . import ref
 from .integral_image import integral_image_kernel, DEFAULT_TILE
 from .haar_stage import haar_stage_sums_kernel
 from .window_variance import window_inv_sigma_kernel
+from .packed_window import packed_stage_sums_kernel
 
 __all__ = ["integral_image", "window_inv_sigma_grid", "dense_stage_sums",
            "integral_image_batch", "window_inv_sigma_grid_batch",
-           "dense_stage_sums_batch", "dense_stage_sums_batch_ref"]
+           "dense_stage_sums_batch", "dense_stage_sums_batch_ref",
+           "packed_stage_sums", "packed_stage_sums_ref"]
 
 
 def _pad_to(x: jax.Array, mh: int, mw: int, mode: str = "edge") -> jax.Array:
@@ -186,6 +188,73 @@ def dense_stage_sums_batch(cascade: Cascade, cascade_static: Cascade, s: int,
         cascade.right_val[k0:k1], ii_b, inv_b, tile=tile,
         interpret=interpret))(iip, invp)
     return out[:, :ny, :nx]
+
+
+# ------------------------------------------------------------------- packed
+# Packed-window stage-run kernel: the compacted tail's counterpart of
+# dense_stage_sums.  Callers see natural shapes — an arbitrary-length packed
+# window list in, (n_stages_run, cap) stage sums out; lane-block padding to
+# the (8, 128) tile is hoisted here, mirroring the dense wrappers' tile
+# padding contract.  The oracle twin packed_stage_sums_ref has the same
+# signature; both are bit-identical to the gather backends in packed_tail.
+
+def _stage_run_slices(cascade_static: Cascade, s0: int, s1: int):
+    bounds = np.asarray(cascade_static.stage_offsets)
+    k0, k1 = int(bounds[s0]), int(bounds[s1])
+    rel = tuple(int(b) - k0 for b in bounds[s0:s1 + 1])
+    return k0, k1, rel
+
+
+def packed_stage_sums(cascade: Cascade, cascade_static: Cascade, s0: int,
+                      s1: int, ii_flat: jax.Array, img: jax.Array,
+                      base: jax.Array, stride: jax.Array, ys: jax.Array,
+                      xs: jax.Array, inv_sigma: jax.Array, *,
+                      tile=DEFAULT_TILE, interpret: bool = True) -> jax.Array:
+    """Stage sums for stages ``[s0, s1)`` over a packed window list.
+
+    ``ii_flat`` is (B, sum_l (h_l+1)*(w_l+1)) — every level's SAT flattened
+    and concatenated per image; ``img``/``base``/``stride`` address each
+    window's level SAT, ``ys``/``xs`` are window origins at that level.
+    Returns (s1 - s0, cap) float32 — one row of vote sums per stage, each
+    bit-identical to the gather oracle on every lane.
+    """
+    k0, k1, rel = _stage_run_slices(cascade_static, s0, s1)
+    cap = ys.shape[0]
+    ty, tx = tile
+    blk = ty * tx
+    cap_pad = cap + ((-cap) % blk)
+    n_rows = cap_pad // tx
+
+    n_sat = ii_flat.shape[1]
+    sat_flat = ii_flat.reshape(1, -1)
+    # absolute flat offsets fold the image index away: one 1-D address space
+    # for every (image, level) SAT, so the kernel's loads are single-index
+    off = img.astype(jnp.int32) * n_sat + base.astype(jnp.int32)
+
+    def blocks(v, dtype):
+        v = jnp.pad(v.astype(dtype), (0, cap_pad - cap))
+        return v.reshape(n_rows, tx)
+
+    out = packed_stage_sums_kernel(
+        cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
+        cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
+        cascade.right_val[k0:k1], rel, sat_flat,
+        blocks(off, jnp.int32), blocks(stride, jnp.int32),
+        blocks(ys, jnp.int32), blocks(xs, jnp.int32),
+        blocks(inv_sigma, jnp.float32), tile=tile, interpret=interpret)
+    return out.reshape(s1 - s0, cap_pad)[:, :cap]
+
+
+def packed_stage_sums_ref(cascade: Cascade, cascade_static: Cascade, s0: int,
+                          s1: int, ii_flat: jax.Array, img: jax.Array,
+                          base: jax.Array, stride: jax.Array, ys: jax.Array,
+                          xs: jax.Array, inv_sigma: jax.Array) -> jax.Array:
+    """Oracle twin of :func:`packed_stage_sums` (same signature contract)."""
+    k0, _k1, rel = _stage_run_slices(cascade_static, s0, s1)
+    return ref.packed_stage_sums_ref(
+        cascade.rect_xywh, cascade.rect_w, cascade.wc_threshold,
+        cascade.left_val, cascade.right_val, k0, rel, ii_flat, img, base,
+        stride, ys, xs, inv_sigma)
 
 
 def dense_stage_sums_batch_ref(cascade: Cascade, cascade_static: Cascade,

@@ -1,0 +1,246 @@
+"""The one packed-tail evaluator: compacted cascade stages, three backends.
+
+Every "tail" in the system — the batched engine's shared-compaction
+segments (``Detector._build_batch_fn``) and the streaming engine's
+incremental evaluation over changed windows (``StreamEngine._build_fn``) —
+runs the same computation: a run of cascade stages over a *packed* window
+list whose entries live on different images and pyramid levels, addressed
+through flat per-level SAT offsets.  This module is its single
+implementation, with three interchangeable, bit-identical backends:
+
+``gather``
+    The fori-loop oracle (one weak classifier at a time, 12 tiny gathers
+    per classifier).  Fewest operations in flight; wins when the packed
+    list is tiny, and is the exactness referee for the other two.
+
+``bulk``
+    One *bulk* gather per rectangle corner across all ``K`` weak
+    classifiers of a stage — 4 gathers of shape (K, 3, cap) instead of
+    12·K scalarized ones.  The strong XLA default for mid-sized lists.
+
+``pallas``
+    The blocked packed-window kernel (:mod:`repro.kernels.packed_window`):
+    lanes processed in (8, 128) blocks with the flat SAT resident per
+    dispatch and the whole stage run evaluated per block.  Wins when the
+    packed list is large (high survivor / changed-window density).
+
+The dense/packed/gather *crossover* is a measured property, not a guess:
+:func:`measure_rungs` times each backend at capacity-ladder sizes and
+records the winner per rung; ``Detector.calibrated(tune_tail=True)``
+persists that ladder in ``EngineConfig.tail_rungs`` so batched detection,
+streaming, and serving all inherit one decision.  (The *dense* end of the
+spectrum — full-grid waves through the dense tile kernel — is chosen
+earlier, by the engine's segment plan; this module only arbitrates the
+packed/gather end.)
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.cascade import Cascade, WINDOW
+
+__all__ = ["BACKENDS", "stage_sums", "select_backend", "measure_rungs"]
+
+_AREA = float(WINDOW * WINDOW)
+
+BACKENDS = ("gather", "bulk", "pallas")
+
+# capacity-ladder sizes at which measure_rungs races the backends; chosen to
+# bracket the real ladders (BATCH_CAP_FLOOR=128 .. stream rung doublings)
+DEFAULT_RUNG_SIZES = (128, 512, 2048, 8192)
+
+
+def _gather_stage_sum(cascade: Cascade, ii_flat: jax.Array, img: jax.Array,
+                      base: jax.Array, stride: jax.Array, ys: jax.Array,
+                      xs: jax.Array, inv_sigma: jax.Array, k0, k1
+                      ) -> jax.Array:
+    """Stage sum over the packed list, one weak classifier at a time.
+
+    The semantic reference: per-window arithmetic matches
+    ``features.stage_sum_windows`` bit-for-bit — same rectangle
+    accumulation order, same normalization — only the SAT lookup goes
+    through the packed (img, base + y*stride + x) indexing.
+    """
+
+    def rect(y0, x0, rh, rw):
+        y1, x1 = y0 + rh, x0 + rw
+        return (ii_flat[img, base + y1 * stride + x1]
+                - ii_flat[img, base + y0 * stride + x1]
+                - ii_flat[img, base + y1 * stride + x0]
+                + ii_flat[img, base + y0 * stride + x0])
+
+    def body(k, acc):
+        rects = jax.lax.dynamic_index_in_dim(cascade.rect_xywh, k, 0, False)
+        w = jax.lax.dynamic_index_in_dim(cascade.rect_w, k, 0, False)
+        feat = jnp.zeros_like(ys, jnp.float32)
+        for r in range(rects.shape[0]):
+            rx, ry, rw, rh = rects[r, 0], rects[r, 1], rects[r, 2], rects[r, 3]
+            feat = feat + w[r] * rect(ys + ry, xs + rx, rh, rw)
+        f_norm = feat * inv_sigma / _AREA
+        vote = jnp.where(f_norm < cascade.wc_threshold[k],
+                         cascade.left_val[k], cascade.right_val[k])
+        return acc + vote
+
+    init = jnp.zeros_like(ys, jnp.float32)
+    return jax.lax.fori_loop(k0, k1, body, init)
+
+
+def _bulk_stage_sum(cascade: Cascade, ii_flat: jax.Array, img: jax.Array,
+                    base: jax.Array, stride: jax.Array, ys: jax.Array,
+                    xs: jax.Array, inv_sigma: jax.Array,
+                    k0: int, k1: int) -> jax.Array:
+    """Stage sum over packed windows, one *bulk* gather per rect corner.
+
+    Bit-identical decisions to :func:`_gather_stage_sum` (same rectangle
+    accumulation order, same normalization, weak votes summed in
+    ascending-``k`` order), but restructured for XLA: instead of a
+    ``fori_loop`` issuing 12 tiny gathers per weak classifier, all
+    ``K = k1 - k0`` weak classifiers' corner lookups are batched into 4
+    gathers of shape (K, 3, cap).  ``k0``/``k1`` must be Python ints
+    (stage bounds are static).
+    """
+    rects = cascade.rect_xywh[k0:k1]            # (K, 3, 4) int32
+    w = cascade.rect_w[k0:k1]                   # (K, 3)
+    rx = rects[:, :, 0][:, :, None]
+    ry = rects[:, :, 1][:, :, None]
+    rw = rects[:, :, 2][:, :, None]
+    rh = rects[:, :, 3][:, :, None]
+    y0 = ys[None, None, :] + ry                 # (K, 3, cap)
+    x0 = xs[None, None, :] + rx
+    y1 = y0 + rh
+    x1 = x0 + rw
+
+    def g(y, x):
+        return ii_flat[img[None, None, :],
+                       base[None, None, :] + y * stride[None, None, :] + x]
+
+    area = g(y1, x1) - g(y0, x1) - g(y1, x0) + g(y0, x0)   # (K, 3, cap)
+    feat = jnp.zeros((area.shape[0], area.shape[2]), jnp.float32)
+    for r in range(rects.shape[1]):
+        feat = feat + w[:, r, None] * area[:, r]
+    f_norm = feat * inv_sigma[None, :] / _AREA
+    votes = jnp.where(f_norm < cascade.wc_threshold[k0:k1, None],
+                      cascade.left_val[k0:k1, None],
+                      cascade.right_val[k0:k1, None])
+    acc = jnp.zeros_like(inv_sigma)
+    for k in range(k1 - k0):    # ascending-k adds, matching the fori_loop
+        acc = acc + votes[k]
+    return acc
+
+
+def stage_sums(cascade: Cascade, cascade_static: Cascade, s0: int, s1: int,
+               ii_flat: jax.Array, img: jax.Array, base: jax.Array,
+               stride: jax.Array, ys: jax.Array, xs: jax.Array,
+               inv_sigma: jax.Array, *, backend: str = "bulk",
+               interpret: bool = True) -> jax.Array:
+    """(s1 - s0, cap) vote sums for stages ``[s0, s1)`` over a packed list.
+
+    One call per tail *segment*: stage thresholds are applied by the
+    caller between rows, so evaluating the whole run at once is exact (the
+    packed list is only recompacted at segment boundaries).  ``backend``
+    picks the execution strategy; all three produce bit-identical rows.
+    ``cascade`` carries (possibly traced) parameter arrays; the *static*
+    twin provides the stage boundaries needed at trace time.
+    """
+    if backend == "pallas":
+        from . import ops
+        return ops.packed_stage_sums(
+            cascade, cascade_static, s0, s1, ii_flat, img, base, stride,
+            ys, xs, inv_sigma, interpret=interpret)
+    bounds = np.asarray(cascade_static.stage_offsets)
+    if backend == "bulk":
+        fn = _bulk_stage_sum
+    elif backend == "gather":
+        fn = _gather_stage_sum
+    else:
+        raise ValueError(f"unknown packed-tail backend: {backend!r} "
+                         f"(expected one of {BACKENDS})")
+    return jnp.stack([
+        fn(cascade, ii_flat, img, base, stride, ys, xs, inv_sigma,
+           int(bounds[s]), int(bounds[s + 1]))
+        for s in range(s0, s1)])
+
+
+def select_backend(config, n_windows: int) -> str:
+    """Backend for a packed list of ``n_windows`` lanes under ``config``.
+
+    ``config.tail_backend`` forces a specific backend; ``"auto"`` walks the
+    calibrated ``config.tail_rungs`` ladder — ((max_windows, backend), ...)
+    ascending — and picks the smallest rung holding the list (the last rung
+    backend beyond the ladder).  An empty ladder falls back to ``bulk``.
+    """
+    b = getattr(config, "tail_backend", "auto")
+    if b != "auto":
+        return b
+    rungs = getattr(config, "tail_rungs", ())
+    if not rungs:
+        return "bulk"
+    for max_windows, backend in rungs:
+        if n_windows <= max_windows:
+            return backend
+    return rungs[-1][1]
+
+
+def measure_rungs(cascade: Cascade, *, interpret: bool = True,
+                  sizes: tuple = DEFAULT_RUNG_SIZES, repeats: int = 3,
+                  inner: int = 10, seed: int = 0) -> dict:
+    """Race the packed-tail backends at capacity-ladder sizes.
+
+    Builds a representative packed workload (real SAT of a random image,
+    uniformly scattered window origins — the post-compaction access
+    pattern), times each backend evaluating the *full* cascade per size
+    (best-of-``repeats`` over ``inner`` warm iterations), and returns::
+
+        {"sizes": [...], "n_windows": int, "ms": {backend: [...]},
+         "rungs": ((max_windows, winner), ...), "crossover": int}
+
+    ``n_windows`` is the workload's dense window count, so
+    ``size / n_windows`` is the survivor *density* each rung corresponds
+    to (the x-axis of the crossover sweep in ``bench_detector``).
+
+    ``crossover`` is the smallest rung won by the Pallas kernel (-1 if it
+    never wins — a legitimate outcome on hardware where gathers are cheap).
+    """
+    from repro.core.integral import integral_images, window_inv_sigma
+
+    rng = np.random.default_rng(seed)
+    h = w = 160
+    img = jnp.asarray(rng.integers(0, 255, (h, w)).astype(np.float32))
+    ii, pair = integral_images(img)
+    ii_flat = ii.reshape(1, -1)
+    n_stages = cascade.n_stages
+    ms: dict[str, list] = {b: [] for b in BACKENDS}
+
+    for size in sizes:
+        ys = jnp.asarray(rng.integers(0, h - WINDOW + 1, size), jnp.int32)
+        xs = jnp.asarray(rng.integers(0, w - WINDOW + 1, size), jnp.int32)
+        inv = window_inv_sigma(pair, ys, xs, WINDOW)
+        imgi = jnp.zeros(size, jnp.int32)
+        base = jnp.zeros(size, jnp.int32)
+        stride = jnp.full(size, w + 1, jnp.int32)
+        for bk in BACKENDS:
+            fn = jax.jit(lambda c, iif, iv, _bk=bk: stage_sums(
+                c, cascade, 0, n_stages, iif, imgi, base, stride, ys, xs,
+                iv, backend=_bk, interpret=interpret))
+            jax.block_until_ready(fn(cascade, ii_flat, inv))   # compile
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for _ in range(inner):
+                    out = fn(cascade, ii_flat, inv)
+                jax.block_until_ready(out)
+                best = min(best, (time.perf_counter() - t0) / inner)
+            ms[bk].append(best * 1e3)
+
+    rungs = tuple(
+        (size, min(BACKENDS, key=lambda b: ms[b][i]))
+        for i, size in enumerate(sizes))
+    crossover = next((size for size, bk in rungs if bk == "pallas"), -1)
+    n_windows = (h - WINDOW + 1) * (w - WINDOW + 1)
+    return {"sizes": list(sizes), "n_windows": n_windows, "ms": ms,
+            "rungs": rungs, "crossover": crossover}

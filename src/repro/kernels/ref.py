@@ -68,6 +68,49 @@ def dense_stage_sums_ref(rect_xywh: jax.Array, rect_w: jax.Array,
     return jax.lax.fori_loop(0, rect_xywh.shape[0], body, init)
 
 
+# ---------------------------------------------------------------- packed
+def packed_stage_sums_ref(rect_xywh: jax.Array, rect_w: jax.Array,
+                          wc_threshold: jax.Array, left_val: jax.Array,
+                          right_val: jax.Array, k0: int, rel_bounds: tuple,
+                          ii_flat: jax.Array, img: jax.Array,
+                          base: jax.Array, stride: jax.Array, ys: jax.Array,
+                          xs: jax.Array, inv_sigma: jax.Array) -> jax.Array:
+    """(n_run, cap) stage sums over a packed window list — the gather
+    oracle of the packed-window kernel.
+
+    ``ii_flat`` is (B, S) flattened per-level SATs; each window is
+    addressed through ``(img, base + y*stride + x)``.  ``rel_bounds`` are
+    the run's stage boundaries relative to ``k0``.  Per-lane arithmetic is
+    the wave engine's packed-tail reference: rectangle corners combined as
+    ``d - b - c + a``, ``feat * inv_sigma / AREA`` normalization, weak
+    votes summed in ascending-``k`` order.
+    """
+
+    def rect(y0, x0, rh, rw):
+        y1, x1 = y0 + rh, x0 + rw
+        return (ii_flat[img, base + y1 * stride + x1]
+                - ii_flat[img, base + y0 * stride + x1]
+                - ii_flat[img, base + y1 * stride + x0]
+                + ii_flat[img, base + y0 * stride + x0])
+
+    def body(k, acc):
+        rects = jax.lax.dynamic_index_in_dim(rect_xywh, k, 0, False)
+        w = jax.lax.dynamic_index_in_dim(rect_w, k, 0, False)
+        feat = jnp.zeros_like(ys, jnp.float32)
+        for r in range(rects.shape[0]):
+            rx, ry, rw_, rh = rects[r, 0], rects[r, 1], rects[r, 2], rects[r, 3]
+            feat = feat + w[r] * rect(ys + ry, xs + rx, rh, rw_)
+        f_norm = feat * inv_sigma / _AREA
+        vote = jnp.where(f_norm < wc_threshold[k], left_val[k], right_val[k])
+        return acc + vote
+
+    init = jnp.zeros_like(ys, jnp.float32)
+    return jnp.stack([
+        jax.lax.fori_loop(k0 + rel_bounds[si], k0 + rel_bounds[si + 1],
+                          body, init)
+        for si in range(len(rel_bounds) - 1)])
+
+
 # --------------------------------------------------------------- batched
 # Oracle twins of the batched wrappers in ops.py: a leading B axis over the
 # single-image references, so the batched kernels have the same bit-level

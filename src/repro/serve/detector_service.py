@@ -246,11 +246,16 @@ class DetectorService:
         return req
 
     # ------------------------------------------------------------ warm-up
-    def warmup(self, probe_image, safety: float = 2.0) -> None:
+    def warmup(self, probe_image, safety: float = 2.0,
+               tune_tail: bool = False) -> None:
         """Calibrate engine capacities on a probe image (profile-guided
         ``capacity_fracs``, the prerequisite for the packed tail's speedup)
-        and measure a baseline per-pod rate."""
-        self.detector = self.detector.calibrated(probe_image, safety)
+        and measure a baseline per-pod rate.  ``tune_tail=True`` also races
+        the packed-tail backends and persists the kernel-vs-gather
+        crossover ladder in the detector config, which every session's
+        stream engine and every batch flush then inherits."""
+        self.detector = self.detector.calibrated(probe_image, safety,
+                                                 tune_tail=tune_tail)
         self.detector.detect(probe_image)        # compile
         t0 = time.perf_counter()
         self.detector.detect(probe_image)        # measure warm
@@ -534,9 +539,14 @@ class DetectorService:
             "images": int(pod_shares[i]),
             "sim_time_s": float(pod_sim[i]),
         } for i, p in enumerate(self.pods)]
+        cfg = self.detector.config
         return {
             "n_done": n_done,
             "imgs_per_s": n_done / elapsed,
+            "tail": {                     # packed-tail policy in force
+                "backend": cfg.tail_backend,
+                "rungs": [list(r) for r in cfg.tail_rungs],
+            },
             "latency_ms_p50": float(np.percentile(lat, 50)) if len(lat) else 0.0,
             "latency_ms_p95": float(np.percentile(lat, 95)) if len(lat) else 0.0,
             "latency_ms_p99": float(np.percentile(lat, 99)) if len(lat) else 0.0,

@@ -5,10 +5,14 @@ dense-wave head cut off: the initial alive set is not "every window that
 survived the dense waves" but "every window whose tile content changed"
 (computed on host by :mod:`repro.stream.tiles`).  Changed windows from
 every frame in the stack and every pyramid level are compacted into one
-shared window list and run through *all* cascade stages with the packed
-gather arithmetic — which is bit-identical per window to the baseline
-engine's (`repro.core.engine._packed_stage_sum` docstring), so a recomputed
-window reaches exactly the decision a full-frame ``detect`` would.
+shared window list and run through *all* cascade stages by the shared
+packed-tail evaluator (:mod:`repro.kernels.packed_tail`) — whose three
+backends (gather oracle, bulk gather, blocked Pallas kernel) are
+bit-identical per window to the baseline engine's tail, so a recomputed
+window reaches exactly the decision a full-frame ``detect`` would.  The
+backend is picked per capacity rung from the detector config's measured
+crossover ladder (``EngineConfig.tail_rungs``): large changed sets route
+through the packed-window kernel, small ones stay on gathers.
 
 One jitted program per (bucket shape, batch size, capacity rung, active
 level subset): the rung is the smallest power-of-two holding the flush's
@@ -36,6 +40,7 @@ from repro.core.cascade import Cascade, WINDOW
 from repro.core.engine import Detector, _window_limits
 from repro.core.integral import integral_images
 from repro.core.pyramid import pyramid_plan, downscale_indices
+from repro.kernels import packed_tail
 
 __all__ = ["StreamGeometry", "StreamEngine", "LevelSubset"]
 
@@ -75,52 +80,6 @@ def _packed_inv_sigma(pair_flat: jax.Array, img: jax.Array, base: jax.Array,
     var = s2 / _AREA - (s1 / _AREA) ** 2
     sigma = jnp.sqrt(jnp.maximum(var, 1.0))
     return 1.0 / sigma
-
-
-def _bulk_stage_sum(cascade: Cascade, ii_flat: jax.Array, img: jax.Array,
-                    base: jax.Array, stride: jax.Array, ys: jax.Array,
-                    xs: jax.Array, inv_sigma: jax.Array,
-                    k0: int, k1: int) -> jax.Array:
-    """Stage sum over packed windows, one *bulk* gather per rect corner.
-
-    Bit-identical decisions to ``repro.core.engine._packed_stage_sum``
-    (same rectangle accumulation order, same normalization, weak votes
-    summed in ascending-``k`` order), but restructured for XLA: instead of
-    a ``fori_loop`` issuing 12 tiny gathers per weak classifier, all
-    ``K = k1 - k0`` weak classifiers' corner lookups are batched into 4
-    gathers of shape (K, 3, cap).  On CPU this is the difference between
-    the gather being a vectorized kernel and a per-classifier dispatch
-    loop — the streaming engine runs every cascade stage on the packed
-    list (no dense waves to hide behind), so this is its hot path.
-    ``k0``/``k1`` must be Python ints (stage bounds are static).
-    """
-    rects = cascade.rect_xywh[k0:k1]            # (K, 3, 4) int32
-    w = cascade.rect_w[k0:k1]                   # (K, 3)
-    rx = rects[:, :, 0][:, :, None]
-    ry = rects[:, :, 1][:, :, None]
-    rw = rects[:, :, 2][:, :, None]
-    rh = rects[:, :, 3][:, :, None]
-    y0 = ys[None, None, :] + ry                 # (K, 3, cap)
-    x0 = xs[None, None, :] + rx
-    y1 = y0 + rh
-    x1 = x0 + rw
-
-    def g(y, x):
-        return ii_flat[img[None, None, :],
-                       base[None, None, :] + y * stride[None, None, :] + x]
-
-    area = g(y1, x1) - g(y0, x1) - g(y1, x0) + g(y0, x0)   # (K, 3, cap)
-    feat = jnp.zeros((area.shape[0], area.shape[2]), jnp.float32)
-    for r in range(rects.shape[1]):
-        feat = feat + w[:, r, None] * area[:, r]
-    f_norm = feat * inv_sigma[None, :] / _AREA
-    votes = jnp.where(f_norm < cascade.wc_threshold[k0:k1, None],
-                      cascade.left_val[k0:k1, None],
-                      cascade.right_val[k0:k1, None])
-    acc = jnp.zeros_like(inv_sigma)
-    for k in range(k1 - k0):    # ascending-k adds, matching the fori_loop
-        acc = acc + votes[k]
-    return acc
 
 
 class LevelSubset:
@@ -261,9 +220,14 @@ class StreamEngine:
         det = self.detector
         geo = self.geometry(hp, wp)
         sub = geo.subset(levels)
-        bounds = det.stage_bounds
         n_stages = det.n_stages
         n_slots = sub.n_slots
+        cascade_static = det.cascade
+        # the whole incremental tail is one stage run [0, n_stages); the
+        # evaluator backend is a static property of this rung's program,
+        # read off the calibrated crossover ladder
+        backend = packed_tail.select_backend(det.config, cap)
+        interpret = det.config.interpret
         lvl_of_slot = jnp.asarray(sub.lvl_of_slot)
         y_of_slot = jnp.asarray(sub.y_of_slot)
         x_of_slot = jnp.asarray(sub.x_of_slot)
@@ -302,12 +266,12 @@ class StreamEngine:
             stride_sel = jnp.take(sat_stride_of_lvl, lvl_sel)
             inv_sel = _packed_inv_sigma(pair_flat, b_sel, base_sel,
                                         stride_sel, y_sel, x_sel)
+            ss_run = packed_tail.stage_sums(
+                cascade, cascade_static, 0, n_stages, ii_flat, b_sel,
+                base_sel, stride_sel, y_sel, x_sel, inv_sel,
+                backend=backend, interpret=interpret)
             for s in range(n_stages):
-                k0, k1 = bounds[s], bounds[s + 1]
-                ss = _bulk_stage_sum(cascade, ii_flat, b_sel, base_sel,
-                                     stride_sel, y_sel, x_sel, inv_sel,
-                                     k0, k1)
-                valid = valid & (ss >= cascade.stage_threshold[s])
+                valid = valid & (ss_run[s] >= cascade.stage_threshold[s])
             # scatter survivors back onto the full (B, n_slots) grid; dead
             # and padding lanes target index B*n_slots which is dropped
             target = jnp.where(valid, sel, batch * n_slots)

@@ -116,6 +116,56 @@ def test_no_overflow_under_auto_capacities(det, images):
         assert not bool(np.asarray(res.overflow))
 
 
+# ------------------------------------------------------- config validation
+def test_capacity_fracs_length_mismatch_raises():
+    # this cascade's wave plan performs exactly one compaction
+    with pytest.raises(ValueError, match="1 compaction"):
+        Detector(CASC, EngineConfig(mode="wave", capacity_fracs=(0.5, 0.5),
+                                    **KW))
+    with pytest.raises(ValueError, match="batch_capacity_fracs"):
+        Detector(CASC, EngineConfig(mode="wave",
+                                    batch_capacity_fracs=(0.5, 0.5, 0.5),
+                                    **KW))
+
+
+@pytest.mark.parametrize("bad", [0.0, -0.1, 1.5])
+def test_capacity_fracs_out_of_range_raises(bad):
+    with pytest.raises(ValueError, match=r"must lie in \(0, 1\]"):
+        Detector(CASC, EngineConfig(mode="wave", capacity_fracs=(bad,),
+                                    **KW))
+
+
+def test_unknown_tail_backend_raises():
+    with pytest.raises(ValueError, match="tail_backend"):
+        Detector(CASC, EngineConfig(tail_backend="simd"))
+
+
+# ---------------------------------------------------- packed-tail backends
+@pytest.mark.parametrize("backend", ["gather", "bulk", "pallas"])
+def test_forced_tail_backend_bit_identical(det, images, backend):
+    """Every packed-tail backend must reproduce the sequential reference
+    through the real batched engine (shared compactions, segment runs)."""
+    singles = [det.detect(im) for im in images]
+    d = Detector(CASC, EngineConfig(mode="wave", tail_backend=backend,
+                                    **KW))
+    for s, b in zip(singles, d.detect_batch(images, strategy="packed")):
+        assert np.array_equal(s, b)
+
+
+def test_calibrated_tune_tail_sets_ladder(det, images):
+    cal = det.calibrated(images[0], tune_tail=True, tail_sizes=(64, 256))
+    from repro.kernels.packed_tail import BACKENDS
+    assert cal.config.tail_backend == "auto"
+    assert len(cal.config.tail_rungs) == 2
+    assert all(bk in BACKENDS for _n, bk in cal.config.tail_rungs)
+    assert cal.cal_profile["densities"]      # per-compaction densities
+    assert cal.cal_profile["tail"]["crossover"] in (-1, 64, 256)
+    # the ladder only changes scheduling, never detections
+    for s, b in zip([det.detect(im) for im in images],
+                    cal.detect_batch(images, strategy="packed")):
+        assert np.array_equal(s, b)
+
+
 # ------------------------------------------------------------ calibration
 def test_calibrate_capacities_roundtrip(det, images):
     img = images[0]

@@ -176,6 +176,64 @@ def test_changed_window_mask_is_conservative(det):
                         assert mask[iy, ix], (lv, iy, ix)
 
 
+# --------------------------------------------------------- capacity ladder
+def test_cap_for_zero_changed_picks_smallest_rung(engine):
+    from repro.stream.engine import STREAM_CAP_BASE
+    geo = engine.geometry(HW, HW)
+    assert geo.n_slots > STREAM_CAP_BASE     # fixture sanity
+    assert engine._cap_for(geo.n_slots, 1, 0) == STREAM_CAP_BASE
+
+
+def test_cap_for_rung_boundaries(engine):
+    from repro.stream.engine import STREAM_CAP_BASE
+    geo = engine.geometry(HW, HW)
+    total = geo.n_slots
+    # exactly at a rung: no promotion to the next power of two
+    assert engine._cap_for(total, 1, STREAM_CAP_BASE) == STREAM_CAP_BASE
+    at2 = 2 * STREAM_CAP_BASE
+    if at2 <= total:
+        assert engine._cap_for(total, 1, STREAM_CAP_BASE + 1) == at2
+        assert engine._cap_for(total, 1, at2) == at2
+    # the rung never exceeds the subset's own slot count
+    assert engine._cap_for(10, 1, 9) == 10
+    assert engine._cap_for(10, 2, 25) == 20
+    # degenerate empty subset still yields a positive capacity
+    assert engine._cap_for(0, 1, 0) == 1
+
+
+def test_incremental_over_budget_returns_overflow(det):
+    """More changed windows than cap_budget: nothing dispatches, the
+    caller gets the overflow flag and must fall back to a full refresh."""
+    tight = StreamEngine(det, 0.01)          # budget = 1% of windows
+    geo = tight.geometry(HW, HW)
+    masks = [np.ones(ny * nx, bool) for (ny, nx) in geo.level_windows]
+    before = tight.dispatches
+    bitmaps, counts, overflow = tight.incremental(
+        [np.zeros((HW, HW), np.float32)], [masks], HW, HW)
+    assert overflow
+    assert bitmaps == []
+    assert counts.sum() == geo.n_slots
+    assert tight.dispatches == before        # no program ran
+
+
+# ------------------------------------------------------- forced tail kernel
+def test_stream_forced_pallas_tail_identical(det):
+    """The packed-window kernel on the incremental path must reproduce
+    per-frame detect bit-for-bit (the crossover ladder may route any rung
+    through it, so every rung must be safe)."""
+    kd = Detector(CASC, EngineConfig(mode="wave", tail_backend="pallas",
+                                     **KW))
+    vd = VideoDetector(kd, StreamConfig(tile=12, threshold=0.0,
+                                        keyframe_interval=0))
+    video = make_video("static_cctv", n_frames=3, h=HW, w=HW, seed=2)
+    n_incr = 0
+    for frame, _gt in video:
+        rects, st = vd.process(frame)
+        assert np.array_equal(rects, det.detect(frame))
+        n_incr += st.mode == "incremental"
+    assert n_incr >= 1
+
+
 # ------------------------------------------------------------- fallbacks
 def test_overflow_falls_back_to_full(det):
     """A capacity too small for the changed set must degrade to a full
