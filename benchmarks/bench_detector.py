@@ -92,6 +92,22 @@ def run(n_images: int = 5, hw: int = 128, fast: bool = False) -> list[dict]:
             "TP": "-", "FP": "-", "FN": "-", "total_error": "-",
             "precision": "-", "recall": "-", "wall_s": full_s})
 
+    # plan-cache probe: a repeated same-bucket flush must compile nothing.
+    # The counters land in BENCH_detector.json so plan-cache regressions
+    # (programs rebuilt per call) show up in CI artifacts.
+    before = det.program_builds
+    det.detect_batch(imgs, strategy="packed")
+    rebuilds = det.program_builds - before
+    rows.append({"system": (f"program builds={det.program_builds} "
+                            f"(repeat flush: +{rebuilds})"),
+                 "TP": "-", "FP": "-", "FN": "-", "total_error": "-",
+                 "precision": "-", "recall": "-", "wall_s": 0.0,
+                 "program_builds": det.program_builds,
+                 "rebuilds_on_repeat": rebuilds})
+    if rebuilds:
+        print(f"WARNING: repeated same-bucket flush rebuilt {rebuilds} "
+              f"program(s) — plan cache regression")
+
     rows.extend(_crossover_rows(casc, scenes, imgs, fast))
     return rows
 

@@ -52,6 +52,7 @@ def _run_scenario(det, engine, kind, threshold, tile, keyframe, n_frames, hw):
 
     vd = VideoDetector(det, cfg, engine=engine)
     lat, stats, streamed = [], [], []
+    builds0 = engine.program_builds + det.program_builds
     t0 = time.perf_counter()
     for f in frames:
         t1 = time.perf_counter()
@@ -60,6 +61,9 @@ def _run_scenario(det, engine, kind, threshold, tile, keyframe, n_frames, hw):
         streamed.append(rects)
         stats.append(st)
     stream_s = time.perf_counter() - t0
+    # programs compiled during the *timed* (pre-warmed) run: a plan-cache
+    # regression shows up here as a nonzero rebuild count in the artifact
+    rebuilds = engine.program_builds + det.program_builds - builds0
 
     lat_ms = np.asarray(lat) * 1e3
     exact = all(np.array_equal(a, b) for a, b in zip(baseline, streamed))
@@ -82,6 +86,8 @@ def _run_scenario(det, engine, kind, threshold, tile, keyframe, n_frames, hw):
         "modes": "/".join(f"{m}:{sum(1 for s in stats if s.mode == m)}"
                           for m in ("full", "incremental", "cached")),
         "exact": exact if threshold <= 0 else "-",
+        "programs": engine.program_builds,
+        "rebuilds": rebuilds,
     }
 
 
@@ -130,6 +136,9 @@ def main(fast: bool = False):
     save_rows("bench_video", rows)
     cctv = rows[0]
     assert cctv["exact"] is True, "threshold-0 streaming must be bit-exact"
+    assert cctv["rebuilds"] == 0, (
+        f"warmed static stream rebuilt {cctv['rebuilds']} program(s) — "
+        f"plan cache regression")
     if cctv["speedup"] < 2.0:
         print(f"WARNING: static-stream speedup {cctv['speedup']:.2f}x < 2x")
     inter = rows[1]

@@ -16,6 +16,9 @@ python scripts/check_dead_stores.py src tests benchmarks scripts examples
 echo "=== smoke: packed-tail crossover (pallas == gather oracle, bit-exact) ==="
 python scripts/crossover_smoke.py
 
+echo "=== smoke: plan layer (ladder-chosen backends bit-exact, stats reflect plan) ==="
+python scripts/plan_smoke.py
+
 echo "=== smoke: bench_detector (batched head + packed-tail crossover, fast) ==="
 python -m benchmarks.run --fast --only bench_detector --artifacts .
 

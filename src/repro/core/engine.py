@@ -59,8 +59,7 @@ sequential ``detect`` under any bucket policy.
 
 from __future__ import annotations
 
-import math
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import numpy as np
 import jax
@@ -69,18 +68,13 @@ import jax.numpy as jnp
 from .cascade import Cascade, WINDOW
 from .integral import integral_images, window_inv_sigma
 from .features import stage_sum_windows
-from .pyramid import pyramid_plan, downscale_nearest, downscale_indices
+from .pyramid import downscale_nearest, downscale_indices
 from . import nms
 from repro.kernels import packed_tail
+import repro.plan as planlib
 
 __all__ = ["EngineConfig", "LevelResult", "BatchResult", "Detector",
            "calibrate_capacities"]
-
-# static-shape floor of every compaction capacity: keeps `nonzero(size=...)`
-# shapes sane for tiny levels, and is exactly the per-(image, level) lane
-# waste that `detect_batch`'s shared compaction amortizes across the batch.
-CAP_FLOOR = 256
-BATCH_CAP_FLOOR = 128
 
 
 class EngineConfig(NamedTuple):
@@ -136,22 +130,6 @@ class BatchResult(NamedTuple):
     overflow: jax.Array      # () bool — shared capacity exceeded
 
 
-def _auto_capacities(n_windows: int, n_compactions: int,
-                     fracs: Sequence[float]) -> list[int]:
-    caps = []
-    for i in range(n_compactions):
-        if i < len(fracs):
-            f = fracs[i]
-        else:
-            # conservative default: halve per compaction with an 8% floor
-            # (first compaction keeps everything — can never overflow);
-            # profile-guided schedules via calibrate_capacities are tighter.
-            f = max(0.5 ** i, 0.08)
-        cap = max(int(math.ceil(n_windows * min(f, 1.0))), CAP_FLOOR)
-        caps.append(min(cap, n_windows))  # never more lanes than windows
-    return caps
-
-
 def calibrate_capacities(alive_counts: np.ndarray, n_windows: int,
                          safety: float = 2.0) -> tuple:
     """Profile-guided capacity fractions from measured per-stage survivor
@@ -162,17 +140,10 @@ def calibrate_capacities(alive_counts: np.ndarray, n_windows: int,
 
 def _window_limits(h_valid, w_valid, level_h: int, level_w: int,
                    pad_h: int, pad_w: int):
-    """Inclusive max window origin (y_lim, x_lim) at one pyramid level so the
-    window samples only valid (unpadded) source pixels.
-
-    ``downscale_nearest`` maps level row ``r`` to source row
-    ``(r * pad_h) // level_h``; a window rooted at ``y`` is valid iff its last
-    sampled row is ``< h_valid``, i.e. ``y <= (h_valid*level_h - 1)//pad_h -
-    (WINDOW - 1)``.  Works identically on host ints and traced int32 arrays.
-    """
-    y_lim = (h_valid * level_h - 1) // pad_h - (WINDOW - 1)
-    x_lim = (w_valid * level_w - 1) // pad_w - (WINDOW - 1)
-    return y_lim, x_lim
+    """Delegates to the plan layer's single definition of window-limit
+    arithmetic (call-time lookup keeps the circular package import lazy)."""
+    return planlib.window_limits(h_valid, w_valid, level_h, level_w,
+                                 pad_h, pad_w)
 
 
 class Detector:
@@ -188,69 +159,42 @@ class Detector:
         self.config = config
         self.stage_bounds = tuple(int(o) for o in np.asarray(cascade.stage_offsets))
         self.n_stages = cascade.n_stages
-        self._validate_config()
+        planlib.validate_config(self.n_stages, config)
         self.cal_profile: dict = {}      # set by calibrated() on its result
-        self._raw_level_fns: dict = {}   # (h, w) -> unjitted level fn
-        self._level_fns: dict = {}       # (h, w) -> jitted level fn
-        self._vmap_level_fns: dict = {}  # (h, w, B) -> jit(vmap(level fn))
-        self._batch_fns: dict = {}       # (Hp, Wp, B) -> packed batch fn
-
-    def _validate_config(self) -> None:
-        """Fail fast on malformed capacity schedules / tail policy instead
-        of a downstream shape error deep inside a jitted program."""
-        cfg = self.config
-        n_comp = max(sum(1 for (_, _, d) in self._segments() if not d), 1)
-        for name, fracs in (("capacity_fracs", cfg.capacity_fracs),
-                            ("batch_capacity_fracs", cfg.batch_capacity_fracs)):
-            if not fracs:
-                continue                 # () = auto schedule
-            if len(fracs) != n_comp:
-                raise ValueError(
-                    f"EngineConfig.{name} has {len(fracs)} entries but the "
-                    f"segment plan performs {n_comp} compaction(s) "
-                    f"(mode={cfg.mode!r}, dense_segments={cfg.dense_segments}"
-                    f", compact_every={cfg.compact_every}, "
-                    f"n_stages={self.n_stages})")
-            bad = [f for f in fracs if not (0.0 < float(f) <= 1.0)]
-            if bad:
-                raise ValueError(
-                    f"EngineConfig.{name} entries must lie in (0, 1], "
-                    f"got {bad} in {tuple(fracs)}")
-        if cfg.tail_backend not in packed_tail.BACKENDS + ("auto",):
-            raise ValueError(
-                f"EngineConfig.tail_backend must be one of "
-                f"{packed_tail.BACKENDS + ('auto',)}, got "
-                f"{cfg.tail_backend!r}")
+        self.program_builds = 0          # executor builds (plan-cache probe)
+        self._raw_level_fns: dict = {}   # level-plan key -> unjitted level fn
+        self._level_fns: dict = {}       # level-plan key -> jitted level fn
+        self._vmap_level_fns: dict = {}  # (key, B) -> jit(vmap(level fn))
+        self._batch_fns: dict = {}       # batch-plan key -> packed batch fn
 
     # ---------------------------------------------------------------- plan
     def _segments(self) -> list[tuple[int, int, bool]]:
-        """[(s0, s1, dense?)] covering all stages in order."""
-        if self.config.mode == "dense":
-            return [(0, self.n_stages, True)]
-        segs: list[tuple[int, int, bool]] = []
-        s = 0
-        for ds in self.config.dense_segments:
-            if s >= self.n_stages:
-                break
-            s1 = min(s + ds, self.n_stages)
-            segs.append((s, s1, True))
-            s = s1
-        while s < self.n_stages:
-            s1 = min(s + self.config.compact_every, self.n_stages)
-            segs.append((s, s1, False))
-            s = s1
-        return segs
+        """[(s0, s1, dense?)] covering all stages in order (the plan
+        layer's segmentation; kept as a method for callers/benchmarks)."""
+        return [tuple(s) for s in planlib.segment_spans(self.n_stages,
+                                                        self.config)]
+
+    def level_plan(self, h: int, w: int) -> "planlib.LevelWavePlan":
+        """Compiled plan of the single-image wave program at one level
+        shape (cached by the plan compiler)."""
+        return planlib.compile_level_plan(self.config, self.n_stages, h, w)
+
+    def batch_plan(self, hp: int, wp: int,
+                   batch: int = 1) -> "planlib.CascadePlan":
+        """Compiled plan of the packed batched program for one (bucket,
+        batch size) (cached by the plan compiler)."""
+        return planlib.compile_plan(self.config, self.n_stages, hp, wp,
+                                    batch=batch)
 
     # ---------------------------------------------------------------- build
-    def _build_level_fn(self, h: int, w: int):
+    def _build_level_fn(self, lp: "planlib.LevelWavePlan"):
+        """Thin executor over a :class:`repro.plan.LevelWavePlan`: all
+        geometry, segmentation, and capacities are read off the plan."""
         cfg = self.config
-        step = cfg.step
-        ny = (h - WINDOW) // step + 1
-        nx = (w - WINDOW) // step + 1
-        n_windows = ny * nx
-        segs = self._segments()
-        n_comp = max(sum(1 for (_, _, d) in segs if not d), 1)
-        caps = _auto_capacities(n_windows, n_comp, cfg.capacity_fracs)
+        step = lp.step
+        ny, nx = lp.ny, lp.nx
+        segs = lp.segments
+        self.program_builds += 1
         bounds = self.stage_bounds
         cascade_static = self.cascade  # static feature geometry for Pallas
 
@@ -277,9 +221,9 @@ class Detector:
             # state of the compacted list (after first compaction)
             compacted = False
             cur_ys = cur_xs = cur_inv = cur_valid = None
-            compact_i = 0
 
-            for (s0, s1, dense) in segs:
+            for seg in segs:
+                s0, s1, dense = seg.s0, seg.s1, seg.dense
                 if dense:
                     for s in range(s0, s1):
                         k0, k1 = bounds[s], bounds[s + 1]
@@ -300,7 +244,7 @@ class Detector:
                     else:
                         src_valid, src_ys, src_xs, src_inv = (
                             cur_valid, cur_ys, cur_xs, cur_inv)
-                    cap = caps[min(compact_i, len(caps) - 1)]
+                    cap = seg.capacity
                     overflow = overflow | (src_valid.sum() > cap)
                     idx = jnp.nonzero(src_valid, size=cap, fill_value=-1)[0]
                     sel = jnp.maximum(idx, 0)
@@ -309,7 +253,6 @@ class Detector:
                     cur_inv = jnp.take(src_inv, sel)
                     cur_valid = idx >= 0
                     compacted = True
-                    compact_i += 1
                     for s in range(s0, s1):
                         k0, k1 = bounds[s], bounds[s + 1]
                         ss = stage_sum_windows(cascade, ii, cur_ys, cur_xs,
@@ -318,7 +261,7 @@ class Detector:
                         counts.append(cur_valid.sum())
 
             if not compacted:   # dense mode: single final compaction
-                cap = caps[0]
+                cap = lp.capacities[0]
                 overflow = alive.sum() > cap
                 idx = jnp.nonzero(alive, size=cap, fill_value=-1)[0]
                 sel = jnp.maximum(idx, 0)
@@ -334,20 +277,20 @@ class Detector:
         return level_fn
 
     def _raw_level_fn(self, h: int, w: int):
-        key = (h, w)
-        if key not in self._raw_level_fns:
-            self._raw_level_fns[key] = self._build_level_fn(h, w)
-        return self._raw_level_fns[key]
+        lp = self.level_plan(h, w)
+        if lp.key not in self._raw_level_fns:
+            self._raw_level_fns[lp.key] = self._build_level_fn(lp)
+        return self._raw_level_fns[lp.key]
 
     def _level_fn(self, h: int, w: int):
-        key = (h, w)
+        key = self.level_plan(h, w).key
         if key not in self._level_fns:
             self._level_fns[key] = jax.jit(self._raw_level_fn(h, w))
         return self._level_fns[key]
 
     def _vmap_level_fn(self, h: int, w: int, batch: int):
-        """jit(vmap(level_fn)) — batch variants share the per-shape builder."""
-        key = (h, w, batch)
+        """jit(vmap(level_fn)) — batch variants share the per-plan builder."""
+        key = (self.level_plan(h, w).key, batch)
         if key not in self._vmap_level_fns:
             self._vmap_level_fns[key] = jax.jit(
                 jax.vmap(self._raw_level_fn(h, w), in_axes=(None, 0, 0)))
@@ -365,7 +308,7 @@ class Detector:
 
     def _padded_plan(self, h: int, w: int):
         hp, wp = self._bucket_hw(h, w)
-        return hp, wp, pyramid_plan(hp, wp, self.config.scale_factor)
+        return hp, wp, self.batch_plan(hp, wp).levels_all
 
     @staticmethod
     def _decode_rects(ys: np.ndarray, xs: np.ndarray,
@@ -421,73 +364,38 @@ class Detector:
         """Number of leading stages run as dense (full-grid) waves."""
         return sum(s1 - s0 for (s0, s1, dense) in self._segments() if dense)
 
-    def _shared_caps(self, n_slots: int, batch: int) -> list[int]:
-        """Per-compaction capacities of the batched engine's shared window
-        list (one entry per tail segment; at least one).  Mirrors
-        ``_auto_capacities`` but over the whole batch's windows, so the
-        static floor is paid once per flush instead of per (image, level)."""
-        segs = self._segments()
-        n_comp = max(sum(1 for (_, _, d) in segs if not d), 1)
-        bf = self.config.batch_capacity_fracs or self.config.capacity_fracs
-        total = n_slots * batch
-        caps: list[int] = []
-        for k in range(n_comp):
-            if k < len(bf):
-                f = float(bf[k])
-            else:
-                # conservative auto schedule, as in _auto_capacities: the
-                # first compaction keeps everything, then halve with a floor
-                f = max(0.5 ** k, 0.08)
-            cap = max(int(math.ceil(total * min(f, 1.0))), BATCH_CAP_FLOOR)
-            cap = min(cap, caps[-1] if caps else total)
-            caps.append(cap)
-        return caps
-
-    def _build_batch_fn(self, hp: int, wp: int, batch: int):
-        """One jitted program per (bucket shape, batch size): per-level dense
-        waves over the whole stack, then *shared* compactions — survivors
-        from every (image, level) are packed into one window list for the
-        tail stages, recompacted per segment exactly like the single-image
-        wave engine.  This is the paper's lane-occupancy argument applied
-        across the batch: the per-(image, level) static capacity floor
-        (``CAP_FLOOR`` lanes even when a handful of windows survive) is paid
-        once per flush instead of B*L times."""
+    def _build_batch_fn(self, plan: "planlib.CascadePlan"):
+        """One jitted program per :class:`repro.plan.CascadePlan` (bucket
+        shape, batch size): per-level dense waves over the whole stack,
+        then *shared* compactions — survivors from every (image, level)
+        are packed into one window list for the tail stages, recompacted
+        per segment exactly like the single-image wave engine.  This is
+        the paper's lane-occupancy argument applied across the batch: the
+        per-(image, level) static capacity floor is paid once per flush
+        instead of B*L times.  All geometry, slot/SAT layout, capacities,
+        and per-segment tail backends are read off the plan."""
         cfg = self.config
-        step = cfg.step
-        plan = pyramid_plan(hp, wp, cfg.scale_factor)
-        n_dense = self._dense_prefix()
+        step = plan.step
+        batch = plan.batch
+        hp, wp = plan.hp, plan.wp
+        n_dense = plan.dense_prefix
         bounds = self.stage_bounds
         n_stages = self.n_stages
         cascade_static = self.cascade  # static feature geometry for Pallas
         use_pallas = cfg.use_pallas and step == 1
+        self.program_builds += 1
         if use_pallas:
             from repro.kernels import ops as kops
 
-        # static per-level geometry + flattened slot / SAT-layout tables
-        level_geo = []
-        lvl_parts, y_parts, x_parts = [], [], []
-        sat_sizes, sat_strides = [], []
-        for li, lv in enumerate(plan):
-            ny = (lv.height - WINDOW) // step + 1
-            nx = (lv.width - WINDOW) // step + 1
-            gy = np.arange(ny, dtype=np.int32) * step
-            gx = np.arange(nx, dtype=np.int32) * step
-            level_geo.append((lv, ny, nx, gy, gx))
-            lvl_parts.append(np.full(ny * nx, li, np.int32))
-            y_parts.append(np.repeat(gy, nx))
-            x_parts.append(np.tile(gx, ny))
-            sat_sizes.append((lv.height + 1) * (lv.width + 1))
-            sat_strides.append(lv.width + 1)
-        lvl_of_slot = jnp.asarray(np.concatenate(lvl_parts))
-        y_of_slot = jnp.asarray(np.concatenate(y_parts))
-        x_of_slot = jnp.asarray(np.concatenate(x_parts))
-        sat_base_of_lvl = jnp.asarray(np.concatenate(
-            [[0], np.cumsum(sat_sizes)[:-1]]).astype(np.int32))
-        sat_stride_of_lvl = jnp.asarray(np.asarray(sat_strides, np.int32))
-        n_slots = int(lvl_of_slot.shape[0])
-        shared_caps = self._shared_caps(n_slots, batch)
-        tail_segs = [(s0, s1) for (s0, s1, dense) in self._segments()
-                     if not dense]
+        layout = plan.layout
+        lvl_of_slot = jnp.asarray(layout.lvl_of_slot)
+        y_of_slot = jnp.asarray(layout.y_of_slot)
+        x_of_slot = jnp.asarray(layout.x_of_slot)
+        sat_base_of_lvl = jnp.asarray(layout.sat_base_of_lvl)
+        sat_stride_of_lvl = jnp.asarray(layout.sat_stride_of_lvl)
+        n_slots = plan.n_slots
+        cap0 = plan.capacities[0]
+        tail_segs = plan.tail_segments
 
         def batch_fn(cascade: Cascade, stack: jax.Array,
                      valid_hw: jax.Array) -> BatchResult:
@@ -497,12 +405,14 @@ class Detector:
             # packed tail's gathers; dense mode (no tail) never builds them
             sat_parts: list = []
             alive_parts, inv_parts = [], []
-            for li, (lv, ny, nx, gy, gx) in enumerate(level_geo):
-                ys_idx = downscale_indices(hp, lv.height)
-                xs_idx = downscale_indices(wp, lv.width)
+            for lp in plan.levels:
+                ys_idx = downscale_indices(hp, lp.height)
+                xs_idx = downscale_indices(wp, lp.width)
                 img_l = stack[:, ys_idx[:, None], xs_idx[None, :]]
+                gy = np.arange(lp.ny, dtype=np.int32) * step
+                gx = np.arange(lp.nx, dtype=np.int32) * step
 
-                def head(img):
+                def head(img, gy=gy, gx=gx):
                     ii, ii_pair = integral_images(img)
                     inv = window_inv_sigma(
                         ii_pair, jnp.asarray(gy)[:, None],
@@ -513,10 +423,11 @@ class Detector:
                 inv_l = inv_grid_l.reshape(batch, -1)
                 if tail_segs:
                     sat_parts.append(ii_l.reshape(batch, -1))
-                ys_w = jnp.asarray(np.repeat(gy, nx))
-                xs_w = jnp.asarray(np.tile(gx, ny))
+                sl = slice(lp.slot_offset, lp.slot_offset + lp.n_windows)
+                ys_w = jnp.asarray(layout.y_of_slot[sl])
+                xs_w = jnp.asarray(layout.x_of_slot[sl])
                 y_lim, x_lim = _window_limits(
-                    valid_hw[:, 0], valid_hw[:, 1], lv.height, lv.width,
+                    valid_hw[:, 0], valid_hw[:, 1], lp.height, lp.width,
                     hp, wp)                                   # (B,), (B,)
                 alive_l = ((ys_w[None, :] <= y_lim[:, None])
                            & (xs_w[None, :] <= x_lim[:, None]))  # (B, n)
@@ -547,7 +458,6 @@ class Detector:
             inv_flat = jnp.concatenate(inv_parts, axis=1).reshape(-1)
             ii_flat = (jnp.concatenate(sat_parts, axis=1) if tail_segs
                        else None)                         # (B, sum sat sizes)
-            cap0 = shared_caps[0]
             overflow = alive_flat.sum() > cap0
             idx = jnp.nonzero(alive_flat, size=cap0, fill_value=-1)[0]
             sel = jnp.maximum(idx, 0)
@@ -559,8 +469,8 @@ class Detector:
             x_sel = jnp.take(x_of_slot, slot)
             inv_sel = jnp.take(inv_flat, sel)
 
-            for ki, (s0, s1) in enumerate(tail_segs):
-                seg_cap = shared_caps[min(ki, len(shared_caps) - 1)]
+            for ki, seg in enumerate(tail_segs):
+                s0, s1, seg_cap = seg.s0, seg.s1, seg.capacity
                 if ki > 0:  # recompact the shrinking shared list
                     overflow = overflow | (valid.sum() > seg_cap)
                     idx = jnp.nonzero(valid, size=seg_cap, fill_value=-1)[0]
@@ -573,14 +483,13 @@ class Detector:
                     valid = idx >= 0
                 base_sel = jnp.take(sat_base_of_lvl, lvl_sel)
                 stride_sel = jnp.take(sat_stride_of_lvl, lvl_sel)
-                # whole segment in one evaluator call: backend picked per
-                # capacity rung by the calibrated crossover ladder (stage
-                # thresholds still gate survivor counts per stage below)
+                # whole segment in one evaluator call: the backend is the
+                # plan's per-segment decision off the calibrated crossover
+                # ladder (stage thresholds still gate survivors below)
                 ss_run = packed_tail.stage_sums(
                     cascade, cascade_static, s0, s1, ii_flat, b_sel,
                     base_sel, stride_sel, y_sel, x_sel, inv_sel,
-                    backend=packed_tail.select_backend(cfg, seg_cap),
-                    interpret=cfg.interpret)
+                    backend=seg.backend, interpret=cfg.interpret)
                 for j, s in enumerate(range(s0, s1)):
                     valid = valid & (ss_run[j] >= cascade.stage_threshold[s])
                     per_img = jnp.zeros((batch,), jnp.int32).at[b_sel].add(
@@ -597,10 +506,10 @@ class Detector:
         return jax.jit(batch_fn)
 
     def _batch_fn(self, hp: int, wp: int, batch: int):
-        key = (hp, wp, batch)
-        if key not in self._batch_fns:
-            self._batch_fns[key] = self._build_batch_fn(hp, wp, batch)
-        return self._batch_fns[key]
+        plan = self.batch_plan(hp, wp, batch)
+        if plan.key not in self._batch_fns:
+            self._batch_fns[plan.key] = self._build_batch_fn(plan)
+        return self._batch_fns[plan.key]
 
     @staticmethod
     def _pack_stack(imgs: list, hp: int, wp: int):
@@ -627,16 +536,16 @@ class Detector:
         (hp, wp), = hws
         stack, valid_hw = self._pack_stack(imgs, hp, wp)
         out = []
-        for lv in pyramid_plan(hp, wp, self.config.scale_factor):
-            ys_idx = downscale_indices(hp, lv.height)
-            xs_idx = downscale_indices(wp, lv.width)
+        for lp in self.batch_plan(hp, wp).levels_all:
+            ys_idx = downscale_indices(hp, lp.height)
+            xs_idx = downscale_indices(wp, lp.width)
             img_l = stack[:, ys_idx[:, None], xs_idx[None, :]]
             lims = np.stack(_window_limits(
-                valid_hw[:, 0], valid_hw[:, 1], lv.height, lv.width,
+                valid_hw[:, 0], valid_hw[:, 1], lp.height, lp.width,
                 hp, wp), axis=1).astype(np.int32)
-            res = self._vmap_level_fn(lv.height, lv.width, len(imgs))(
+            res = self._vmap_level_fn(lp.height, lp.width, len(imgs))(
                 self.cascade, img_l, jnp.asarray(lims))
-            out.append((res, lv.scale))
+            out.append((res, lp.scale))
         return out
 
     def detect_batch(self, images, group: bool = True,
@@ -672,8 +581,8 @@ class Detector:
 
     def _detect_bucket_packed(self, imgs: list, hp: int, wp: int) -> list:
         n = len(imgs)
-        plan = pyramid_plan(hp, wp, self.config.scale_factor)
-        if not plan:  # bucket smaller than the detection window
+        plan = self.batch_plan(hp, wp, n)
+        if not plan.levels:  # bucket smaller than the detection window
             return [np.zeros((0, 4), np.int32) for _ in range(n)]
         stack, valid_hw = self._pack_stack(imgs, hp, wp)
         res = self._batch_fn(hp, wp, n)(
@@ -683,7 +592,7 @@ class Detector:
                 "batched-engine shared capacity overflow; raise "
                 "batch_capacity_fracs / capacity_fracs (see "
                 "Detector.calibrated)")
-        scales = np.asarray([lv.scale for lv in plan])
+        scales = np.asarray([lp.scale for lp in plan.levels])
         val = np.asarray(res.valid)
         b = np.asarray(res.img)[val]
         lvl = np.asarray(res.lvl)[val]
@@ -732,43 +641,66 @@ class Detector:
 
         With ``tune_tail=True`` the packed-tail backends are additionally
         *raced* at capacity-ladder sizes (``packed_tail.measure_rungs``)
-        and the winners persisted in ``EngineConfig.tail_rungs``, so every
-        consumer of the config — batched detection, the streaming engine's
-        rung-sized programs, and the serving layer — inherits the measured
-        kernel-vs-gather crossover.  The returned detector's
-        ``cal_profile`` records the per-compaction survivor densities and
-        the timing sweep for benchmarks to report."""
-        h, w = np.asarray(image).shape
-        _, _, plan = self._padded_plan(h, w)
+        on the profiled image's *real* multi-level packed workload — the
+        plan's pyramid levels, each weighted by its measured survivor
+        density — and the winners persisted in ``EngineConfig.tail_rungs``,
+        so every consumer of the config — batched detection, the streaming
+        engine's rung-sized programs, and the serving layer — inherits the
+        measured kernel-vs-gather crossover.  The returned detector's
+        ``cal_profile`` records the per-compaction survivor densities
+        (overall and per level) and the timing sweep for benchmarks."""
+        image = np.asarray(image, np.float32)
+        h, w = image.shape
+        hp, wp = self._bucket_hw(h, w)
+        bplan = self.batch_plan(hp, wp)       # per-level window counts
         levels = self.detect_raw(image)
-        comp_stages = [s0 for (s0, s1, dense) in self._segments()
-                       if not dense]
+        comp_stages = [seg.s0 for seg in bplan.segments if not seg.dense]
         if not comp_stages:  # dense mode: single final compaction
             comp_stages = [self.n_stages]
         fracs = np.zeros(len(comp_stages))          # worst level, per comp
         surv_tot = np.zeros(len(comp_stages))       # summed over levels
+        level_density: list[float] = []             # first compaction, per lv
         win_tot = 0
-        for lv, (res, _scale) in zip(plan, levels):
-            ny = (lv.height - WINDOW) // self.config.step + 1
-            nx = (lv.width - WINDOW) // self.config.step + 1
-            nwin = max(ny * nx, 1)
+        for lp, (res, _scale) in zip(bplan.levels, levels):
+            nwin = max(lp.n_windows, 1)
             win_tot += nwin
             cnt = np.asarray(res.alive_counts, np.float64)
             for k, s0 in enumerate(comp_stages):
                 survivors = cnt[s0 - 1] if s0 > 0 else float(nwin)
                 fracs[k] = max(fracs[k], survivors / nwin)
                 surv_tot[k] += survivors
+                if k == 0:
+                    level_density.append(survivors / nwin)
         # same safety shaping as calibrate_capacities, on both schedules
         densities = (surv_tot / max(win_tot, 1)).tolist()
         fracs = calibrate_capacities(fracs, 1, safety)
         batch_fracs = calibrate_capacities(surv_tot, win_tot, safety)
         cfg = self.config._replace(capacity_fracs=fracs,
                                    batch_capacity_fracs=batch_fracs)
-        profile: dict = {"densities": densities, "n_windows": int(win_tot)}
+        profile: dict = {
+            "densities": densities, "n_windows": int(win_tot),
+            "level_densities": level_density,
+            "levels": [(lp.height, lp.width, lp.n_windows)
+                       for lp in bplan.levels],
+        }
         if tune_tail:
             kw = {} if tail_sizes is None else {"sizes": tuple(tail_sizes)}
+            # real workload: the profiled image at every pyramid level of
+            # the plan, each level weighted by its expected packed-window
+            # share (density * window count) — closes the synthetic
+            # single-level gap for skewed pyramids
+            padded = image
+            if (hp, wp) != (h, w):
+                padded = np.pad(image, ((0, hp - h), (0, wp - w)))
+            padded_j = jnp.asarray(padded)
+            workload = [
+                (np.asarray(downscale_nearest(padded_j, lp.height,
+                                              lp.width)),
+                 d * lp.n_windows)
+                for lp, d in zip(bplan.levels, level_density)]
             tail = packed_tail.measure_rungs(
-                self.cascade, interpret=self.config.interpret, **kw)
+                self.cascade, interpret=self.config.interpret,
+                workload=workload, **kw)
             cfg = cfg._replace(tail_backend="auto", tail_rungs=tail["rungs"])
             profile["tail"] = tail
         det = Detector(self.cascade, cfg)
@@ -783,15 +715,14 @@ class Detector:
         levels = self.detect_raw(image)
         sizes = self.cascade.stage_sizes().astype(np.int64)
         img = np.asarray(image)
-        _, _, plan = self._padded_plan(img.shape[0], img.shape[1])
+        hp, wp = self._bucket_hw(img.shape[0], img.shape[1])
+        bplan = self.batch_plan(hp, wp)   # per-level window counts
         total_windows = 0
         weak_early = 0   # ideal per-stage early exit (sequential semantics)
         weak_dense = 0   # delayed rejection
         per_level = []
-        for lv, (res, scale) in zip(plan, levels):
-            ny = (lv.height - WINDOW) // self.config.step + 1
-            nx = (lv.width - WINDOW) // self.config.step + 1
-            nwin = ny * nx
+        for lp, (res, scale) in zip(bplan.levels, levels):
+            nwin = lp.n_windows
             counts = np.asarray(res.alive_counts, np.int64)
             alive_before = np.concatenate([[nwin], counts[:-1]])
             we = int((alive_before * sizes).sum())

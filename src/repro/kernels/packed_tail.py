@@ -169,35 +169,98 @@ def stage_sums(cascade: Cascade, cascade_static: Cascade, s0: int, s1: int,
 def select_backend(config, n_windows: int) -> str:
     """Backend for a packed list of ``n_windows`` lanes under ``config``.
 
-    ``config.tail_backend`` forces a specific backend; ``"auto"`` walks the
-    calibrated ``config.tail_rungs`` ladder — ((max_windows, backend), ...)
-    ascending — and picks the smallest rung holding the list (the last rung
-    backend beyond the ladder).  An empty ladder falls back to ``bulk``.
+    Delegates to the plan layer's single decision function
+    (:func:`repro.plan.select_backend`) — engines never call this
+    directly any more; they read the per-segment/per-rung backend off
+    their compiled :class:`repro.plan.CascadePlan`.  Kept here as the
+    kernels-side entry point (lazy import avoids a package cycle).
     """
-    b = getattr(config, "tail_backend", "auto")
-    if b != "auto":
-        return b
-    rungs = getattr(config, "tail_rungs", ())
-    if not rungs:
-        return "bulk"
-    for max_windows, backend in rungs:
-        if n_windows <= max_windows:
-            return backend
-    return rungs[-1][1]
+    from repro.plan import select_backend as _select
+    return _select(config, n_windows)
+
+
+def _build_workload(workload, rng):
+    """Per-level SATs + sampling tables for :func:`measure_rungs`.
+
+    ``workload`` is a list of ``(image, weight)`` — one grayscale image
+    per pyramid level (the *profiled* image downscaled to each level's
+    shape, when called through ``Detector.calibrated``) and that level's
+    expected packed-window share (measured survivor density x window
+    count).  Returns the flat multi-level SAT pair plus a sampler that
+    draws a packed list of a given size with windows distributed across
+    levels in proportion to the weights — the real post-compaction access
+    pattern, not a single-level proxy.
+    """
+    from repro.core.integral import integral_images, window_inv_sigma
+
+    sats, pairs, bases, strides, shapes = [], [], [], [], []
+    base = 0
+    for img, _weight in workload:
+        img = jnp.asarray(np.asarray(img, np.float32))
+        h, w = img.shape
+        ii, pair = integral_images(img)
+        sats.append(np.asarray(ii).reshape(-1))
+        pairs.append(pair)
+        bases.append(base)
+        strides.append(w + 1)
+        shapes.append((h, w))
+        base += (h + 1) * (w + 1)
+    ii_flat = jnp.asarray(np.concatenate(sats))[None, :]
+    weights = np.asarray([max(float(wt), 0.0) for _im, wt in workload])
+    if weights.sum() <= 0:
+        weights = np.asarray([(h - WINDOW + 1) * (w - WINDOW + 1)
+                              for h, w in shapes], np.float64)
+    weights = weights / weights.sum()
+
+    def sample(size):
+        # largest-remainder split of `size` windows across levels ∝ weight;
+        # the packed list stays level-sorted, like a real compaction output
+        exact = weights * size
+        per = np.floor(exact).astype(int)
+        for i in np.argsort(-(exact - per))[:size - per.sum()]:
+            per[i] += 1
+        lv = np.repeat(np.arange(len(shapes)), per)
+        hi_y = np.asarray([h - WINDOW + 1 for h, _w in shapes])
+        hi_x = np.asarray([w - WINDOW + 1 for _h, w in shapes])
+        ys = rng.integers(0, hi_y[lv]).astype(np.int32)
+        xs = rng.integers(0, hi_x[lv]).astype(np.int32)
+        inv = (np.concatenate([
+            np.atleast_1d(np.asarray(window_inv_sigma(
+                pairs[v], jnp.asarray(ys[lv == v]), jnp.asarray(xs[lv == v]),
+                WINDOW)))
+            for v in range(len(shapes)) if (lv == v).any()])
+            if len(lv) else np.zeros(0, np.float32))
+        return (jnp.zeros(len(lv), jnp.int32),
+                jnp.asarray(np.asarray([bases[v] for v in lv], np.int32)),
+                jnp.asarray(np.asarray([strides[v] for v in lv], np.int32)),
+                jnp.asarray(ys), jnp.asarray(xs),
+                jnp.asarray(inv.astype(np.float32)))
+
+    n_windows = int(sum((h - WINDOW + 1) * (w - WINDOW + 1)
+                        for h, w in shapes))
+    return ii_flat, sample, n_windows
 
 
 def measure_rungs(cascade: Cascade, *, interpret: bool = True,
                   sizes: tuple = DEFAULT_RUNG_SIZES, repeats: int = 3,
-                  inner: int = 10, seed: int = 0) -> dict:
+                  inner: int = 10, seed: int = 0,
+                  workload: list | None = None) -> dict:
     """Race the packed-tail backends at capacity-ladder sizes.
 
-    Builds a representative packed workload (real SAT of a random image,
-    uniformly scattered window origins — the post-compaction access
-    pattern), times each backend evaluating the *full* cascade per size
-    (best-of-``repeats`` over ``inner`` warm iterations), and returns::
+    Builds a representative packed workload and times each backend
+    evaluating the *full* cascade per size (best-of-``repeats`` over
+    ``inner`` warm iterations), returning::
 
-        {"sizes": [...], "n_windows": int, "ms": {backend: [...]},
+        {"sizes": [...], "n_windows": int, "levels": int,
+         "ms": {backend: [...]},
          "rungs": ((max_windows, winner), ...), "crossover": int}
+
+    ``workload`` is an optional list of ``(level_image, weight)`` pairs —
+    the profiled image's real pyramid levels with their measured
+    packed-window shares (``Detector.calibrated(tune_tail=True)`` passes
+    this off the plan's level layout), so the race runs the true
+    multi-level gather pattern of a skewed pyramid.  Without it a
+    synthetic single 160x160 level with uniform windows is used.
 
     ``n_windows`` is the workload's dense window count, so
     ``size / n_windows`` is the survivor *density* each rung corresponds
@@ -206,23 +269,16 @@ def measure_rungs(cascade: Cascade, *, interpret: bool = True,
     ``crossover`` is the smallest rung won by the Pallas kernel (-1 if it
     never wins — a legitimate outcome on hardware where gathers are cheap).
     """
-    from repro.core.integral import integral_images, window_inv_sigma
-
     rng = np.random.default_rng(seed)
-    h = w = 160
-    img = jnp.asarray(rng.integers(0, 255, (h, w)).astype(np.float32))
-    ii, pair = integral_images(img)
-    ii_flat = ii.reshape(1, -1)
+    if workload is None:
+        workload = [(rng.integers(0, 255, (160, 160)).astype(np.float32),
+                     1.0)]
+    ii_flat, sample, n_windows = _build_workload(workload, rng)
     n_stages = cascade.n_stages
     ms: dict[str, list] = {b: [] for b in BACKENDS}
 
     for size in sizes:
-        ys = jnp.asarray(rng.integers(0, h - WINDOW + 1, size), jnp.int32)
-        xs = jnp.asarray(rng.integers(0, w - WINDOW + 1, size), jnp.int32)
-        inv = window_inv_sigma(pair, ys, xs, WINDOW)
-        imgi = jnp.zeros(size, jnp.int32)
-        base = jnp.zeros(size, jnp.int32)
-        stride = jnp.full(size, w + 1, jnp.int32)
+        imgi, base, stride, ys, xs, inv = sample(size)
         for bk in BACKENDS:
             fn = jax.jit(lambda c, iif, iv, _bk=bk: stage_sums(
                 c, cascade, 0, n_stages, iif, imgi, base, stride, ys, xs,
@@ -241,6 +297,6 @@ def measure_rungs(cascade: Cascade, *, interpret: bool = True,
         (size, min(BACKENDS, key=lambda b: ms[b][i]))
         for i, size in enumerate(sizes))
     crossover = next((size for size, bk in rungs if bk == "pallas"), -1)
-    n_windows = (h - WINDOW + 1) * (w - WINDOW + 1)
-    return {"sizes": list(sizes), "n_windows": n_windows, "ms": ms,
+    return {"sizes": list(sizes), "n_windows": n_windows,
+            "levels": len(workload), "ms": ms,
             "rungs": rungs, "crossover": crossover}

@@ -1,0 +1,13 @@
+# The cascade plan layer: one typed model of the cascade workload
+# (pyramid geometry, segment/capacity ladders, slot/SAT layout, packed-tail
+# backend choices), compiled once per (bucket, batch, subset, rung) and
+# consumed by thin executors in repro.core.engine and repro.stream.engine.
+from .ir import (CascadePlan, LevelPlan, LevelWavePlan,  # noqa: F401
+                 SegmentPlan, SlotLayout)
+from .compiler import (CAP_FLOOR, BATCH_CAP_FLOOR,  # noqa: F401
+                       STREAM_CAP_BASE, compile_level_plan, compile_plan,
+                       level_capacities, n_compactions, plan_cache_info,
+                       segment_spans, select_backend, shared_capacities,
+                       stream_budget, stream_capacity_rung, validate_config,
+                       window_limits)
+from .geometry import StreamGeometry, LevelSubset  # noqa: F401

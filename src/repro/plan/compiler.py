@@ -1,0 +1,299 @@
+"""The cascade plan compiler: one place that derives execution facts.
+
+``compile_plan`` / ``compile_level_plan`` turn (EngineConfig, cascade
+stage count, bucket shape, batch, optional active-level subset, optional
+capacity rung) into the typed IR of :mod:`repro.plan.ir`.  Everything the
+engines used to re-derive independently lives here, once:
+
+- pyramid levels and per-level window grids / limits
+  (:func:`compile_plan`, :func:`window_limits`);
+- the dense-prefix / compacted-tail segmentation of the cascade
+  (:func:`segment_spans`);
+- compaction capacity ladders — per-level (:func:`level_capacities`),
+  shared across a batch (:func:`shared_capacities`), and the streaming
+  power-of-two rungs (:func:`stream_capacity_rung`, :func:`stream_budget`);
+- the per-segment / per-rung packed-tail backend decision from the
+  measured ``EngineConfig.tail_rungs`` crossover ladder
+  (:func:`select_backend`).
+
+Plans are cached (``functools.lru_cache``) on their full identity, so a
+plan object — and its ``key`` — is stable across calls: executors key
+their jit caches on ``plan.key`` and rebuild a program only when a
+genuinely new plan appears.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+from repro.core.cascade import WINDOW
+from repro.core.pyramid import pyramid_plan
+from repro.kernels.packed_tail import BACKENDS
+
+from .ir import CascadePlan, LevelPlan, LevelWavePlan, SegmentPlan, SlotLayout
+
+__all__ = ["CAP_FLOOR", "BATCH_CAP_FLOOR", "STREAM_CAP_BASE",
+           "segment_spans", "n_compactions", "level_capacities",
+           "shared_capacities", "select_backend", "validate_config",
+           "window_limits", "compile_level_plan", "compile_plan",
+           "stream_capacity_rung", "stream_budget", "plan_cache_info"]
+
+# static-shape floor of every compaction capacity: keeps `nonzero(size=...)`
+# shapes sane for tiny levels, and is exactly the per-(image, level) lane
+# waste that the batched engine's shared compaction amortizes.
+CAP_FLOOR = 256
+BATCH_CAP_FLOOR = 128
+
+# smallest rung of the streaming packed-list capacity ladder: the host
+# knows the exact changed-window count before dispatch, so stream programs
+# compile a few power-of-two capacities and pick the smallest that fits.
+STREAM_CAP_BASE = 512
+
+
+# ------------------------------------------------------------ segmentation
+def segment_spans(n_stages: int, config) -> tuple[tuple[int, int, bool], ...]:
+    """[(s0, s1, dense?)] covering all stages in order — the one
+    segmentation of the cascade into dense waves and compacted tail runs."""
+    if config.mode == "dense":
+        return ((0, n_stages, True),)
+    segs: list[tuple[int, int, bool]] = []
+    s = 0
+    for ds in config.dense_segments:
+        if s >= n_stages:
+            break
+        s1 = min(s + ds, n_stages)
+        segs.append((s, s1, True))
+        s = s1
+    while s < n_stages:
+        s1 = min(s + config.compact_every, n_stages)
+        segs.append((s, s1, False))
+        s = s1
+    return tuple(segs)
+
+
+def n_compactions(spans) -> int:
+    """Compactions a segment plan performs (>= 1: dense mode compacts once
+    at the end to produce its survivor list)."""
+    return max(sum(1 for (_s0, _s1, d) in spans if not d), 1)
+
+
+# -------------------------------------------------------- capacity ladders
+def level_capacities(n_windows: int, n_comp: int, fracs) -> tuple[int, ...]:
+    """Per-compaction survivor capacities of one level's wave program, as
+    fractions of that level's window count (conservative halving schedule
+    when ``fracs`` runs out — profile-guided schedules are tighter)."""
+    caps = []
+    for i in range(n_comp):
+        if i < len(fracs):
+            f = fracs[i]
+        else:
+            # conservative default: halve per compaction with an 8% floor
+            # (first compaction keeps everything — can never overflow)
+            f = max(0.5 ** i, 0.08)
+        cap = max(int(math.ceil(n_windows * min(f, 1.0))), CAP_FLOOR)
+        caps.append(min(cap, n_windows))  # never more lanes than windows
+    return tuple(caps)
+
+
+def shared_capacities(n_slots: int, batch: int, n_comp: int,
+                      config) -> tuple[int, ...]:
+    """Per-compaction capacities of the batched engine's *shared* window
+    list (one entry per compaction; at least one).  Mirrors
+    :func:`level_capacities` but over the whole batch's windows, so the
+    static floor is paid once per flush instead of per (image, level)."""
+    bf = config.batch_capacity_fracs or config.capacity_fracs
+    total = n_slots * batch
+    caps: list[int] = []
+    for k in range(n_comp):
+        if k < len(bf):
+            f = float(bf[k])
+        else:
+            f = max(0.5 ** k, 0.08)
+        cap = max(int(math.ceil(total * min(f, 1.0))), BATCH_CAP_FLOOR)
+        cap = min(cap, caps[-1] if caps else total)
+        caps.append(cap)
+    return tuple(caps)
+
+
+def stream_capacity_rung(n_sub_slots: int, batch: int, n_changed: int) -> int:
+    """Smallest power-of-two ladder rung holding ``n_changed`` packed
+    windows, capped at the active subset's own slot count."""
+    total = max(n_sub_slots * batch, 1)
+    cap = STREAM_CAP_BASE
+    while cap < n_changed:
+        cap *= 2
+    return min(cap, total)
+
+
+def stream_budget(n_slots: int, batch: int, max_changed_frac: float) -> int:
+    """Most changed windows an incremental flush may evaluate; beyond it a
+    full refresh is cheaper anyway (the caller's fallback)."""
+    total = max(n_slots * batch, 1)
+    return min(max(int(math.ceil(total * max_changed_frac)), 1), total)
+
+
+# -------------------------------------------------------- backend decision
+def select_backend(config, n_windows: int) -> str:
+    """Packed-tail backend for a list of ``n_windows`` lanes.
+
+    ``config.tail_backend`` forces a specific backend; ``"auto"`` walks the
+    calibrated ``config.tail_rungs`` ladder — ((max_windows, backend), ...)
+    ascending — and picks the smallest rung holding the list (the last rung
+    backend beyond the ladder).  An empty ladder falls back to ``bulk``.
+    """
+    b = getattr(config, "tail_backend", "auto")
+    if b != "auto":
+        return b
+    rungs = getattr(config, "tail_rungs", ())
+    if not rungs:
+        return "bulk"
+    for max_windows, backend in rungs:
+        if n_windows <= max_windows:
+            return backend
+    return rungs[-1][1]
+
+
+# ------------------------------------------------------------- validation
+def validate_config(n_stages: int, config) -> None:
+    """Fail fast on malformed capacity schedules / tail policy instead of
+    a downstream shape error deep inside a jitted program."""
+    n_comp = n_compactions(segment_spans(n_stages, config))
+    for name, fracs in (("capacity_fracs", config.capacity_fracs),
+                        ("batch_capacity_fracs",
+                         config.batch_capacity_fracs)):
+        if not fracs:
+            continue                 # () = auto schedule
+        if len(fracs) != n_comp:
+            raise ValueError(
+                f"EngineConfig.{name} has {len(fracs)} entries but the "
+                f"segment plan performs {n_comp} compaction(s) "
+                f"(mode={config.mode!r}, "
+                f"dense_segments={config.dense_segments}"
+                f", compact_every={config.compact_every}, "
+                f"n_stages={n_stages})")
+        bad = [f for f in fracs if not (0.0 < float(f) <= 1.0)]
+        if bad:
+            raise ValueError(
+                f"EngineConfig.{name} entries must lie in (0, 1], "
+                f"got {bad} in {tuple(fracs)}")
+    if config.tail_backend not in BACKENDS + ("auto",):
+        raise ValueError(
+            f"EngineConfig.tail_backend must be one of "
+            f"{BACKENDS + ('auto',)}, got {config.tail_backend!r}")
+
+
+# --------------------------------------------------------------- geometry
+def window_limits(h_valid, w_valid, level_h: int, level_w: int,
+                  pad_h: int, pad_w: int):
+    """Inclusive max window origin (y_lim, x_lim) at one pyramid level so
+    the window samples only valid (unpadded) source pixels.
+
+    ``downscale_nearest`` maps level row ``r`` to source row
+    ``(r * pad_h) // level_h``; a window rooted at ``y`` is valid iff its
+    last sampled row is ``< h_valid``, i.e. ``y <= (h_valid*level_h - 1)
+    // pad_h - (WINDOW - 1)``.  Works identically on host ints and traced
+    int32 arrays.
+    """
+    y_lim = (h_valid * level_h - 1) // pad_h - (WINDOW - 1)
+    x_lim = (w_valid * level_w - 1) // pad_w - (WINDOW - 1)
+    return y_lim, x_lim
+
+
+# --------------------------------------------------------------- compile
+@lru_cache(maxsize=512)
+def _pyramid_levels(hp: int, wp: int, scale_factor: float,
+                    step: int) -> tuple[LevelPlan, ...]:
+    """The bucket's full pyramid as LevelPlans — shared by every plan
+    variant over the same bucket geometry."""
+    levels_all, off = [], 0
+    for li, lv in enumerate(pyramid_plan(hp, wp, scale_factor)):
+        ny = (lv.height - WINDOW) // step + 1
+        nx = (lv.width - WINDOW) // step + 1
+        levels_all.append(LevelPlan(li, lv.height, lv.width, lv.scale,
+                                    ny, nx, off))
+        off += ny * nx
+    return tuple(levels_all)
+
+
+@lru_cache(maxsize=512)
+def _slot_layout(hp: int, wp: int, scale_factor: float, step: int,
+                 active: tuple[int, ...]) -> SlotLayout:
+    """One SlotLayout per (bucket geometry, active subset): every plan
+    variant over it — any batch size, any capacity rung — shares the same
+    index arrays instead of rebuilding and separately retaining them."""
+    return SlotLayout(_pyramid_levels(hp, wp, scale_factor, step), active,
+                      step)
+
+
+@lru_cache(maxsize=4096)
+def compile_level_plan(config, n_stages: int, h: int, w: int
+                       ) -> LevelWavePlan:
+    """Plan of the single-image wave program for one level shape."""
+    step = config.step
+    ny = (h - WINDOW) // step + 1
+    nx = (w - WINDOW) // step + 1
+    spans = segment_spans(n_stages, config)
+    caps = level_capacities(ny * nx, n_compactions(spans),
+                            config.capacity_fracs)
+    segments, ki = [], 0
+    for (s0, s1, dense) in spans:
+        if dense:
+            segments.append(SegmentPlan(s0, s1, True))
+        else:
+            segments.append(SegmentPlan(
+                s0, s1, False, caps[min(ki, len(caps) - 1)]))
+            ki += 1
+    key = ("level", h, w, n_stages, config)
+    return LevelWavePlan(key, h, w, step, ny, nx, tuple(segments), caps)
+
+
+@lru_cache(maxsize=4096)
+def compile_plan(config, n_stages: int, hp: int, wp: int, batch: int = 1,
+                 levels: tuple[int, ...] | None = None,
+                 capacity: int | None = None) -> CascadePlan:
+    """Compile the full plan for one (bucket, batch, subset, rung).
+
+    ``levels=None`` activates every pyramid level of the bucket.
+    ``capacity=None`` plans the batched engine's dense-prefix + shared
+    compacted tail (capacities from :func:`shared_capacities`, one tail
+    backend per segment capacity); a given ``capacity`` instead plans the
+    streaming shape — one packed segment over *all* stages at that rung,
+    with the rung's backend.
+    """
+    step = config.step
+    levels_all = _pyramid_levels(hp, wp, config.scale_factor, step)
+    off = sum(lp.n_windows for lp in levels_all)
+    active = (tuple(range(len(levels_all))) if levels is None
+              else tuple(levels))
+    layout = _slot_layout(hp, wp, config.scale_factor, step, active)
+
+    if capacity is None:
+        spans = segment_spans(n_stages, config)
+        caps = shared_capacities(off, batch, n_compactions(spans), config)
+        segments, ki = [], 0
+        for (s0, s1, dense) in spans:
+            if dense:
+                segments.append(SegmentPlan(s0, s1, True))
+            else:
+                c = caps[min(ki, len(caps) - 1)]
+                segments.append(SegmentPlan(s0, s1, False, c,
+                                            select_backend(config, c)))
+                ki += 1
+        segments = tuple(segments)
+    else:
+        caps = (capacity,)
+        segments = (SegmentPlan(0, n_stages, False, capacity,
+                                select_backend(config, capacity)),)
+
+    key = ("cascade", hp, wp, batch, levels, capacity, n_stages, config)
+    return CascadePlan(key, hp, wp, batch, step, levels_all, active,
+                       segments, caps, layout)
+
+
+def plan_cache_info() -> dict:
+    """Hit/miss counters of the plan caches (observability for the
+    plan-cache tests and benchmark artifacts)."""
+    return {"cascade": compile_plan.cache_info()._asdict(),
+            "level": compile_level_plan.cache_info()._asdict(),
+            "layout": _slot_layout.cache_info()._asdict()}

@@ -40,6 +40,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+import repro.plan as planlib
 from repro.scheduling.hetero import (HeteroPodPlan, rate_weighted_split,
                                      replan_on_straggle, update_rates_ema)
 from repro.stream import (StreamConfig, StreamEngine, VideoDetector,
@@ -168,7 +169,11 @@ class DetectorService:
         self._flush_lock = threading.Lock()  # serializes whole flushes
         self._queue: list[DetectionRequest | FrameRequest] = []
         self._next_id = 0
+        # nominal relative speeds until the first real observation (or
+        # warmup) rescales them into absolute window-units/s — mixing the
+        # two scales in the EMA would starve never-observed pods
         self._rates = np.asarray([p.speed for p in self.pods], np.float64)
+        self._rates_in_units = False
         self._pod_shares = np.zeros(len(self.pods), np.int64)
         self._pod_sim_time = np.zeros(len(self.pods), np.float64)
         self._latencies: list[float] = []
@@ -179,6 +184,7 @@ class DetectorService:
         self._t_last: float = 0.0
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
+        self._tail_chosen: list[tuple[int, str]] = []  # set by warmup()
 
     # ------------------------------------------------------------- intake
     def submit(self, image) -> DetectionRequest:
@@ -261,9 +267,20 @@ class DetectorService:
         self.detector.detect(probe_image)        # measure warm
 
         per_img = max(time.perf_counter() - t0, 1e-6)
-        base = 1.0 / per_img
+        probe_units = self._work_units(np.asarray(probe_image).shape)
+        base = probe_units / per_img             # window-units per second
         with self._lock:
             self._rates = np.asarray([p.speed * base for p in self.pods])
+            self._rates_in_units = True
+            # the tail backends the plan layer chose for this detector at
+            # the probe bucket / largest sub-batch that actually executes
+            det = self.detector
+            hp, wp = det._bucket_hw(*np.asarray(probe_image).shape)
+            batch = max((b for b in self.batch_sizes if b <= self.max_batch),
+                        default=1)
+            bplan = det.batch_plan(hp, wp, batch)
+            self._tail_chosen = [(seg.capacity, seg.backend)
+                                 for seg in bplan.tail_segments]
 
     # -------------------------------------------------------------- flush
     def flush(self) -> int:
@@ -285,7 +302,9 @@ class DetectorService:
             images = [r for r in batch if isinstance(r, DetectionRequest)]
             frames = [r for r in batch if isinstance(r, FrameRequest)]
             if images:
-                self._shard_across_pods(images, self._run_shard)
+                self._shard_across_pods(
+                    images, self._run_shard,
+                    [self._work_units(r.image.shape) for r in images])
             while frames:
                 round_, rest, seen = [], [], set()
                 for fr in frames:
@@ -295,17 +314,46 @@ class DetectorService:
                         seen.add(fr.session.stream_id)
                         round_.append(fr)
                 frames = rest
-                self._shard_across_pods(round_, self._run_stream_shard)
+                self._shard_across_pods(
+                    round_, self._run_stream_shard,
+                    [self._work_units(fr.frame.shape) for fr in round_])
             return len(batch)
 
-    def _shard_across_pods(self, items: list, run_fn) -> None:
-        """Rate-weighted pod loop shared by one-shot and stream work."""
-        plan = self._plan(len(items))
+    def _work_units(self, shape) -> int:
+        """Plan-derived cost weight of one work item: the total pyramid
+        window count of its shape bucket, read off the compiled
+        :class:`repro.plan.CascadePlan` (so a 4x-larger image counts as
+        ~4x the work when splitting a flush across pods, instead of every
+        request counting as one unit)."""
+        det = self.detector
+        hp, wp = det._bucket_hw(int(shape[0]), int(shape[1]))
+        return max(det.batch_plan(hp, wp).n_windows_total, 1)
+
+    def _shard_across_pods(self, items: list, run_fn,
+                           weights: list[int]) -> None:
+        """Rate-weighted pod loop shared by one-shot and stream work.
+
+        Shares are planned in *window units* (``_work_units`` per item),
+        then contiguous runs of items are cut at the unit boundaries, so
+        pods of unequal speed get balanced window counts even when a flush
+        mixes image sizes.  Observed rates are tracked in units/s."""
+        plan = self._plan(int(sum(weights)))
+        shards: list[list] = []
+        unit_sums: list[float] = []
+        i = 0
+        for share in plan.shares:
+            start, acc = i, 0.0
+            while i < len(items) and acc + weights[i] / 2 <= share:
+                acc += weights[i]
+                i += 1
+            shards.append(items[start:i])
+            unit_sums.append(acc)
+        if i < len(items):   # rounding leftovers go to the fastest pod,
+            pi = int(np.argmax(plan.rates))     # as in rate_weighted_split
+            unit_sums[pi] += sum(weights[i:])
+            shards[pi] += items[i:]
         observed = np.zeros(len(self.pods), np.float64)
-        cursor = 0
-        for pi, share in enumerate(plan.shares):
-            shard = items[cursor:cursor + share]
-            cursor += share
+        for pi, shard in enumerate(shards):
             if not shard:
                 continue
             t0 = time.perf_counter()
@@ -315,7 +363,7 @@ class DetectorService:
             with self._lock:
                 self._pod_shares[pi] += len(shard)
                 self._pod_sim_time[pi] += sim
-            observed[pi] = len(shard) / sim
+            observed[pi] = unit_sums[pi] / sim
         self._update_rates(observed)
 
     def _plan(self, n: int) -> HeteroPodPlan:
@@ -329,6 +377,16 @@ class DetectorService:
         if not (observed > 0).any():
             return
         with self._lock:
+            if not self._rates_in_units:
+                # first real observation without a warmup(): rescale the
+                # nominal relative seeds into observed units/s, preserving
+                # their ratios, so pods that have not run yet stay on a
+                # comparable scale instead of being rounded to zero share
+                m = observed > 0
+                k = float(np.mean(observed[m]
+                                  / np.maximum(self._rates[m], 1e-12)))
+                self._rates = self._rates * k
+                self._rates_in_units = True
             self._rates = update_rates_ema(self._rates, observed,
                                            self.rate_ema)
             new = replan_on_straggle(self._last_plan, self._rates,
@@ -546,6 +604,9 @@ class DetectorService:
             "tail": {                     # packed-tail policy in force
                 "backend": cfg.tail_backend,
                 "rungs": [list(r) for r in cfg.tail_rungs],
+                # (capacity, backend) the plan layer chose per tail segment
+                # of the warmed probe bucket (set by warmup())
+                "chosen": [list(c) for c in self._tail_chosen],
             },
             "latency_ms_p50": float(np.percentile(lat, 50)) if len(lat) else 0.0,
             "latency_ms_p95": float(np.percentile(lat, 95)) if len(lat) else 0.0,

@@ -9,49 +9,42 @@ shared window list and run through *all* cascade stages by the shared
 packed-tail evaluator (:mod:`repro.kernels.packed_tail`) — whose three
 backends (gather oracle, bulk gather, blocked Pallas kernel) are
 bit-identical per window to the baseline engine's tail, so a recomputed
-window reaches exactly the decision a full-frame ``detect`` would.  The
-backend is picked per capacity rung from the detector config's measured
-crossover ladder (``EngineConfig.tail_rungs``): large changed sets route
-through the packed-window kernel, small ones stay on gathers.
+window reaches exactly the decision a full-frame ``detect`` would.
 
-One jitted program per (bucket shape, batch size, capacity rung, active
-level subset): the rung is the smallest power-of-two holding the flush's
-actual changed count (the host built the masks, so the count is known
-before dispatch), and the *level subset* is the set of pyramid levels that
-actually have changed windows this flush.  Levels whose windows are all
-cached are skipped entirely — no SAT is built for them, and the packed
-flat SAT/slot layout is laid out over only the active subset (the biggest
-per-frame fixed cost of the previous all-level design: every level's SAT was
-rebuilt every frame even when zero of its windows changed).  Concurrent
-streams' changed-tile work items share the single compaction, which is
-what makes many mostly-static streams cheap: the packed list is sized to
-the *sum* of their (small) changed sets, paid once per flush.
+One jitted program per :class:`repro.plan.CascadePlan` — the plan layer
+compiles (bucket shape, batch size, capacity rung, active level subset)
+into the typed IR this executor consumes: the rung is the smallest
+power-of-two holding the flush's actual changed count
+(:func:`repro.plan.stream_capacity_rung`; the host built the masks, so
+the count is known before dispatch), the *level subset* is the set of
+pyramid levels that actually have changed windows this flush, and the
+rung's packed-tail backend is the plan's per-segment decision off the
+measured ``EngineConfig.tail_rungs`` crossover ladder.  Levels whose
+windows are all cached are skipped entirely — no SAT is built for them,
+and the packed flat slot/SAT layout covers only the active subset.
+Concurrent streams' changed-tile work items share the single compaction,
+which is what makes many mostly-static streams cheap: the packed list is
+sized to the *sum* of their (small) changed sets, paid once per flush.
 """
 
 from __future__ import annotations
-
-import math
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core.cascade import Cascade, WINDOW
-from repro.core.engine import Detector, _window_limits
+from repro.core.engine import Detector
 from repro.core.integral import integral_images
-from repro.core.pyramid import pyramid_plan, downscale_indices
+from repro.core.pyramid import downscale_indices
 from repro.kernels import packed_tail
+from repro.plan import (STREAM_CAP_BASE, LevelSubset,  # noqa: F401
+                        StreamGeometry, compile_plan, stream_budget,
+                        stream_capacity_rung)
 
 __all__ = ["StreamGeometry", "StreamEngine", "LevelSubset"]
 
 _AREA = float(WINDOW * WINDOW)
-
-# smallest rung of the packed-list capacity ladder.  The host knows the
-# exact changed-window count before dispatch (it built the masks), so the
-# engine compiles a few power-of-two capacities and picks the smallest one
-# that fits — no overflow guesswork, and a frame with 600 changed windows
-# pays for ~1024 gather lanes instead of a worst-case static cap.
-STREAM_CAP_BASE = 512
 
 
 def _packed_inv_sigma(pair_flat: jax.Array, img: jax.Array, base: jax.Array,
@@ -82,92 +75,6 @@ def _packed_inv_sigma(pair_flat: jax.Array, img: jax.Array, base: jax.Array,
     return 1.0 / sigma
 
 
-class LevelSubset:
-    """Flat slot / SAT layout over an *active subset* of pyramid levels.
-
-    The jitted level-subset program sees only the active levels: its SATs
-    are concatenated in ``levels`` order, its slots are the active levels'
-    slots in the same order.  ``slot_indices`` maps each subset slot back
-    to the full-layout flat slot id, so cached bitmaps merge on host."""
-
-    def __init__(self, geo: "StreamGeometry", levels: tuple[int, ...]):
-        self.levels = levels
-        parts = [np.arange(geo.slot_offsets[li], geo.slot_offsets[li + 1],
-                           dtype=np.int64) for li in levels]
-        self.slot_indices = (np.concatenate(parts) if parts
-                             else np.zeros(0, np.int64))
-        self.n_slots = int(self.slot_indices.shape[0])
-        self.lvl_of_slot = geo.lvl_of_slot[self.slot_indices]
-        self.y_of_slot = geo.y_of_slot[self.slot_indices]
-        self.x_of_slot = geo.x_of_slot[self.slot_indices]
-        # SAT layout over *only* the active levels, addressed by original
-        # level id (inactive levels keep base 0 — no subset slot refers to
-        # them, so the value never feeds a gather)
-        sizes = [geo.sat_sizes[li] for li in levels]
-        bases = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(
-            np.int32) if levels else np.zeros(0, np.int32)
-        self.sat_base_of_lvl = np.zeros(max(len(geo.plan), 1), np.int32)
-        for li, b in zip(levels, bases):
-            self.sat_base_of_lvl[li] = b
-        self.sat_stride_of_lvl = geo.sat_stride_of_lvl
-
-
-class StreamGeometry:
-    """Static per-bucket geometry shared by host planning and jitted code:
-    pyramid plan, per-level window grids, flat slot layout, SAT layout."""
-
-    def __init__(self, detector: Detector, hp: int, wp: int):
-        cfg = detector.config
-        self.hp, self.wp = hp, wp
-        self.step = cfg.step
-        self.plan = pyramid_plan(hp, wp, cfg.scale_factor)
-        self.level_windows: list[tuple[int, int]] = []   # (ny, nx) per level
-        self.slot_offsets: list[int] = [0]               # flat slot ranges
-        lvl_parts, y_parts, x_parts = [], [], []
-        sat_sizes, sat_strides = [], []
-        for li, lv in enumerate(self.plan):
-            ny = (lv.height - WINDOW) // self.step + 1
-            nx = (lv.width - WINDOW) // self.step + 1
-            self.level_windows.append((ny, nx))
-            self.slot_offsets.append(self.slot_offsets[-1] + ny * nx)
-            gy = np.arange(ny, dtype=np.int32) * self.step
-            gx = np.arange(nx, dtype=np.int32) * self.step
-            lvl_parts.append(np.full(ny * nx, li, np.int32))
-            y_parts.append(np.repeat(gy, nx))
-            x_parts.append(np.tile(gx, ny))
-            sat_sizes.append((lv.height + 1) * (lv.width + 1))
-            sat_strides.append(lv.width + 1)
-        self.sat_sizes = sat_sizes
-        self.n_slots = self.slot_offsets[-1]
-        self._subsets: dict[tuple[int, ...], LevelSubset] = {}
-        self.lvl_of_slot = np.concatenate(lvl_parts) if self.plan else \
-            np.zeros(0, np.int32)
-        self.y_of_slot = np.concatenate(y_parts) if self.plan else \
-            np.zeros(0, np.int32)
-        self.x_of_slot = np.concatenate(x_parts) if self.plan else \
-            np.zeros(0, np.int32)
-        self.sat_base_of_lvl = np.concatenate(
-            [[0], np.cumsum(sat_sizes)[:-1]]).astype(np.int32) if self.plan \
-            else np.zeros(0, np.int32)
-        self.sat_stride_of_lvl = np.asarray(sat_strides, np.int32)
-
-    def limits(self, h: int, w: int) -> list[tuple[int, int]]:
-        """Per-level inclusive (y_lim, x_lim) for a true (h, w) frame."""
-        return [_window_limits(h, w, lv.height, lv.width, self.hp, self.wp)
-                for lv in self.plan]
-
-    def split_levels(self, flat: np.ndarray) -> list[np.ndarray]:
-        """Flat (n_slots,) per-window array -> one array per level."""
-        return [flat[self.slot_offsets[li]:self.slot_offsets[li + 1]]
-                for li in range(len(self.plan))]
-
-    def subset(self, levels: tuple[int, ...]) -> LevelSubset:
-        """Cached flat layout over an active level subset (sorted ids)."""
-        if levels not in self._subsets:
-            self._subsets[levels] = LevelSubset(self, levels)
-        return self._subsets[levels]
-
-
 class StreamEngine:
     """Jitted incremental evaluators over a :class:`Detector`'s cascade."""
 
@@ -182,6 +89,7 @@ class StreamEngine:
         self.sat_level_builds = 0
         self.sat_level_total = 0
         self.dispatches = 0
+        self.program_builds = 0          # executor builds (plan-cache probe)
 
     @property
     def sat_level_frac(self) -> float:
@@ -198,41 +106,36 @@ class StreamEngine:
     def cap_budget(self, geo: StreamGeometry, batch: int) -> int:
         """Most changed windows a flush may evaluate incrementally; beyond
         it a full refresh is cheaper anyway (the caller's fallback)."""
-        total = max(geo.n_slots * batch, 1)
-        return min(max(int(math.ceil(total * self.max_changed_frac)), 1),
-                   total)
+        return stream_budget(geo.n_slots, batch, self.max_changed_frac)
 
     def _cap_for(self, n_sub_slots: int, batch: int, n_changed: int) -> int:
         """Smallest ladder rung holding ``n_changed`` packed windows, capped
-        at the active subset's own slot count."""
-        total = max(n_sub_slots * batch, 1)
-        cap = STREAM_CAP_BASE
-        while cap < n_changed:
-            cap *= 2
-        return min(cap, total)
+        at the active subset's own slot count (the plan layer's ladder)."""
+        return stream_capacity_rung(n_sub_slots, batch, n_changed)
 
     # ------------------------------------------------------------- build
-    def _build_fn(self, hp: int, wp: int, batch: int, cap: int,
-                  levels: tuple[int, ...]):
-        """Level-subset program: SATs are built (and the flat slot layout
-        laid out) over only the ``levels`` whose windows changed; fully
-        cached levels cost nothing — not even their SAT pass."""
+    def _build_fn(self, plan):
+        """Thin executor over a stream-shaped :class:`repro.plan
+        .CascadePlan`: SATs are built (and the flat slot layout laid out)
+        over only the plan's active levels — fully cached levels cost
+        nothing, not even their SAT pass.  The whole incremental tail is
+        the plan's single all-stage segment; its capacity is the rung and
+        its backend is the plan's decision off the crossover ladder."""
         det = self.detector
-        geo = self.geometry(hp, wp)
-        sub = geo.subset(levels)
-        n_stages = det.n_stages
-        n_slots = sub.n_slots
+        hp, wp = plan.hp, plan.wp
+        batch = plan.batch
+        seg = plan.segments[0]
+        cap, backend = seg.capacity, seg.backend
+        n_slots = plan.n_slots
         cascade_static = det.cascade
-        # the whole incremental tail is one stage run [0, n_stages); the
-        # evaluator backend is a static property of this rung's program,
-        # read off the calibrated crossover ladder
-        backend = packed_tail.select_backend(det.config, cap)
         interpret = det.config.interpret
-        lvl_of_slot = jnp.asarray(sub.lvl_of_slot)
-        y_of_slot = jnp.asarray(sub.y_of_slot)
-        x_of_slot = jnp.asarray(sub.x_of_slot)
-        sat_base_of_lvl = jnp.asarray(sub.sat_base_of_lvl)
-        sat_stride_of_lvl = jnp.asarray(sub.sat_stride_of_lvl)
+        self.program_builds += 1
+        layout = plan.layout
+        lvl_of_slot = jnp.asarray(layout.lvl_of_slot)
+        y_of_slot = jnp.asarray(layout.y_of_slot)
+        x_of_slot = jnp.asarray(layout.x_of_slot)
+        sat_base_of_lvl = jnp.asarray(layout.sat_base_of_lvl)
+        sat_stride_of_lvl = jnp.asarray(layout.sat_stride_of_lvl)
 
         def frame_fn(cascade: Cascade, stack: jax.Array,
                      mask_flat: jax.Array):
@@ -240,10 +143,9 @@ class StreamEngine:
             # windows to recompute (already limit-masked on host), laid out
             # over the active subset's slots only.
             sat_parts, pair_parts = [], []
-            for li in levels:
-                lv = geo.plan[li]
-                ys_idx = downscale_indices(hp, lv.height)
-                xs_idx = downscale_indices(wp, lv.width)
+            for lp in plan.levels:
+                ys_idx = downscale_indices(hp, lp.height)
+                xs_idx = downscale_indices(wp, lp.width)
                 img_l = stack[:, ys_idx[:, None], xs_idx[None, :]]
                 ii_l, pair_l = jax.vmap(integral_images)(img_l)
                 sat_parts.append(ii_l.reshape(batch, -1))
@@ -267,11 +169,11 @@ class StreamEngine:
             inv_sel = _packed_inv_sigma(pair_flat, b_sel, base_sel,
                                         stride_sel, y_sel, x_sel)
             ss_run = packed_tail.stage_sums(
-                cascade, cascade_static, 0, n_stages, ii_flat, b_sel,
+                cascade, cascade_static, seg.s0, seg.s1, ii_flat, b_sel,
                 base_sel, stride_sel, y_sel, x_sel, inv_sel,
                 backend=backend, interpret=interpret)
-            for s in range(n_stages):
-                valid = valid & (ss_run[s] >= cascade.stage_threshold[s])
+            for j, s in enumerate(range(seg.s0, seg.s1)):
+                valid = valid & (ss_run[j] >= cascade.stage_threshold[s])
             # scatter survivors back onto the full (B, n_slots) grid; dead
             # and padding lanes target index B*n_slots which is dropped
             target = jnp.where(valid, sel, batch * n_slots)
@@ -283,10 +185,12 @@ class StreamEngine:
 
     def _fn(self, hp: int, wp: int, batch: int, cap: int,
             levels: tuple[int, ...]):
-        key = (hp, wp, batch, cap, levels)
-        if key not in self._fns:
-            self._fns[key] = self._build_fn(hp, wp, batch, cap, levels)
-        return self._fns[key]
+        det = self.detector
+        plan = compile_plan(det.config, det.n_stages, hp, wp, batch=batch,
+                            levels=levels, capacity=cap)
+        if plan.key not in self._fns:
+            self._fns[plan.key] = self._build_fn(plan)
+        return self._fns[plan.key]
 
     # -------------------------------------------------------------- run
     def incremental(self, frames: list[np.ndarray],
@@ -298,13 +202,14 @@ class StreamEngine:
 
         ``masks_per_frame[i]`` is one flat bool mask per pyramid level for
         frame ``i``.  The dispatch compiles (and runs) a *level-subset*
-        program keyed on the set of levels with any changed window across
-        the stack; ``active`` optionally widens that set (e.g. the serving
-        layer passes the union of its sessions' ``FramePlan.active_levels``
-        so one chunk shares one program).  Returns ``(survivor bitmaps per
-        frame (flat n_slots), recomputed-window counts, overflow)`` — on
-        overflow (more changed windows than ``cap_budget``) nothing is
-        dispatched and the caller must fall back to a full refresh.
+        program keyed on the plan for the set of levels with any changed
+        window across the stack; ``active`` optionally widens that set
+        (e.g. the serving layer passes the union of its sessions'
+        ``FramePlan.active_levels`` so one chunk shares one program).
+        Returns ``(survivor bitmaps per frame (flat n_slots),
+        recomputed-window counts, overflow)`` — on overflow (more changed
+        windows than ``cap_budget``) nothing is dispatched and the caller
+        must fall back to a full refresh.
         """
         geo = self.geometry(hp, wp)
         batch = len(frames)
