@@ -35,6 +35,8 @@ def print_table(rows: list[dict], cols: list[str] | None = None) -> None:
 
 
 def _fmt(v) -> str:
+    if v is None:
+        return ""
     if isinstance(v, float):
         if v == 0:
             return "0"

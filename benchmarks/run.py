@@ -22,7 +22,7 @@ BENCHES = [
     ("bench_profile", "Fig 13  — per-phase cost profile"),
     ("bench_rit", "Figs 10–12 — time vs content, RIT relation"),
     ("bench_speedup", "Fig 16  — seq vs parallel, both boards"),
-    ("bench_energy", "Figs 17–18 — modeled energy + optimized point"),
+    ("bench_energy", "Figs 17–18 — modeled energy + serving governor Pareto"),
     ("bench_param_sweep", "Fig 20  — error vs step/scaleFactor"),
     ("bench_dvfs", "Figs 21–24 + Table I — DVFS grid + optimum"),
     ("bench_detector", "Tables II/III — ours vs dense reference"),

@@ -28,4 +28,41 @@ python -m benchmarks.run --fast --only bench_rit
 echo "=== smoke: bench_video (tile-reuse + level skip + tail rungs, fast) ==="
 python -m benchmarks.run --fast --only bench_video --artifacts .
 
+echo "=== smoke: bench_energy (DES energy + serving governor Pareto, fast) ==="
+python -m benchmarks.run --fast --only bench_energy --artifacts .
+python - <<'EOF'
+# The governor must meet the SLO at least as often as either static
+# extreme at every point of BENCH_energy.json's Pareto front, and at some
+# SLO beat both extremes on modeled Joules/detection (5% model-drift tol).
+import json
+
+rows = json.load(open("BENCH_energy.json"))["rows"]
+serving = [r for r in rows if r.get("mode") == "serving"]
+by_slo = {}
+for r in serving:
+    by_slo.setdefault(round(r["slo_ms"], 3), {})[r["policy"]] = r
+assert by_slo, "no serving rows in BENCH_energy.json"
+wins = 0
+for slo, pol in sorted(by_slo.items()):
+    gov, mx, lt = pol["energy"], pol["max"], pol["little"]
+    assert gov["slo_met_frac"] >= max(mx["slo_met_frac"],
+                                      lt["slo_met_frac"]) - 1e-9, \
+        f"governor misses SLO more than an extreme at slo={slo}ms"
+    for ext in (mx, lt):
+        if ext["slo_met_frac"] >= gov["slo_met_frac"] - 1e-9:
+            assert gov["J_per_detection"] <= \
+                ext["J_per_detection"] * 1.05, \
+                f"governor beaten by {ext['policy']} at slo={slo}ms"
+    # Pareto-dominance at this SLO: against each extreme the governor
+    # either buys strictly better SLO attainment, or matches/beats its
+    # energy (2% model-drift tolerance)
+    if all(gov["slo_met_frac"] > ext["slo_met_frac"] + 1e-9
+           or gov["J_per_detection"] <= 1.02 * ext["J_per_detection"]
+           for ext in (mx, lt)):
+        wins += 1
+assert wins >= 1, "governor never Pareto-dominates both static extremes"
+print(f"governor Pareto OK: dominates-or-ties both extremes at "
+      f"{wins}/{len(by_slo)} SLO points")
+EOF
+
 echo "CI OK"

@@ -37,7 +37,8 @@ __all__ = ["CAP_FLOOR", "BATCH_CAP_FLOOR", "STREAM_CAP_BASE",
            "segment_spans", "n_compactions", "level_capacities",
            "shared_capacities", "select_backend", "validate_config",
            "window_limits", "compile_level_plan", "compile_plan",
-           "stream_capacity_rung", "stream_budget", "plan_cache_info"]
+           "stream_capacity_rung", "stream_budget", "segment_work_units",
+           "plan_cache_info"]
 
 # static-shape floor of every compaction capacity: keeps `nonzero(size=...)`
 # shapes sane for tiny levels, and is exactly the per-(image, level) lane
@@ -131,6 +132,22 @@ def stream_budget(n_slots: int, batch: int, max_changed_frac: float) -> int:
     full refresh is cheaper anyway (the caller's fallback)."""
     total = max(n_slots * batch, 1)
     return min(max(int(math.ceil(total * max_changed_frac)), 1), total)
+
+
+# ------------------------------------------------------------- work model
+def segment_work_units(plan: CascadePlan) -> tuple[int, ...]:
+    """Per-segment lanes × stage-depth cost vector of a compiled plan.
+
+    The per-segment breakdown behind :attr:`CascadePlan.work_units`: dense
+    segments cost ``n_slots * batch * depth``, compacted tails cost
+    ``capacity * depth``.  Consumers that budget or place *parts* of a
+    cascade (the energy governor's reporting, DAG cost models) read this;
+    consumers that only need the total use ``plan.work_units``.
+    """
+    dense_lanes = plan.n_slots * plan.batch
+    return tuple((dense_lanes if seg.dense
+                  else min(seg.capacity, dense_lanes)) * seg.depth
+                 for seg in plan.segments)
 
 
 # -------------------------------------------------------- backend decision

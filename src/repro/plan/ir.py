@@ -68,6 +68,11 @@ class SegmentPlan(NamedTuple):
     #                     the single-image wave tail runs on the dense grid
     #                     and carries no backend)
 
+    @property
+    def depth(self) -> int:
+        """Cascade stages this segment evaluates per live lane."""
+        return self.s1 - self.s0
+
 
 class SlotLayout:
     """Flat slot / SAT layout over an active subset of pyramid levels.
@@ -152,6 +157,24 @@ class CascadePlan:
     def n_windows_total(self) -> int:
         """Window count of the full pyramid (all levels, active or not)."""
         return sum(lp.n_windows for lp in self.levels_all)
+
+    @property
+    def work_units(self) -> int:
+        """Modeled evaluation cost of the whole plan: lanes × stage depth
+        summed over segments.  Dense segments sweep every slot of the batch
+        for their stage run; a compacted tail segment evaluates at most its
+        survivor ``capacity`` lanes per stage.  This is the cost weight the
+        serving scheduler and energy governor shard and budget by — a deep
+        tail costs more than its window count alone suggests, and two
+        buckets of equal window count but different segmentation cost
+        differently."""
+        dense_lanes = self.n_slots * self.batch
+        total = 0
+        for seg in self.segments:
+            lanes = dense_lanes if seg.dense else min(seg.capacity,
+                                                      dense_lanes)
+            total += lanes * seg.depth
+        return max(total, 1)
 
     @property
     def dense_prefix(self) -> int:

@@ -15,9 +15,14 @@ from .heft import HEFTScheduler  # noqa: F401
 from .policies import (FIFOScheduler, StaticBlockScheduler,  # noqa: F401
                        SequentialScheduler)
 from .energy import (Platform, CorePowerModel, odroid_xu4, rpi3b,  # noqa: F401
-                     tpu_v5e_pod, EXYNOS_BIG_FREQS, EXYNOS_LITTLE_FREQS)
-from .dvfs import DVFSPoint, dvfs_sweep, optimal_operating_point  # noqa: F401
+                     tpu_v5e_pod, EXYNOS_BIG_FREQS, EXYNOS_LITTLE_FREQS,
+                     PodOperatingPoint, pod_operating_points, parked_point,
+                     EnergyAccount)
+from .dvfs import (DVFSPoint, dvfs_sweep, optimal_operating_point,  # noqa: F401
+                   GovernorDecision, evaluate_operating_points,
+                   select_operating_points)
 from .autotune import (SweepCell, accuracy_sweep, error_table,  # noqa: F401
                        match_detections)
 from .hetero import (rate_weighted_split, HeteroPodPlan,  # noqa: F401
-                     mixed_pod_platform, replan_on_straggle)
+                     mixed_pod_platform, replan_on_straggle,
+                     update_rates_ema)

@@ -19,12 +19,17 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Sequence
 
+import itertools
+
 from .dag import build_detection_dag, WorkModel
-from .energy import Platform, odroid_xu4, EXYNOS_BIG_FREQS
+from .energy import (Platform, PodOperatingPoint, odroid_xu4, parked_point,
+                     EXYNOS_BIG_FREQS)
 from .botlev import BotlevScheduler
 from .executor import simulate, SimResult
 
-__all__ = ["DVFSPoint", "dvfs_sweep", "optimal_operating_point"]
+__all__ = ["DVFSPoint", "dvfs_sweep", "optimal_operating_point",
+           "GovernorDecision", "evaluate_operating_points",
+           "select_operating_points"]
 
 
 @dataclass(frozen=True)
@@ -73,6 +78,97 @@ def dvfs_sweep(stage_sizes: Sequence[int],
                     points.append(DVFSPoint(fb, fl, step, sf, res.makespan,
                                             res.energy, res.avg_power, err))
     return points
+
+
+# ------------------------------------------------- serving energy governor
+@dataclass(frozen=True)
+class GovernorDecision:
+    """One flush's chosen per-pod DVFS placement and its model predictions.
+
+    ``rates`` are effective work-units/s (each pod's calibrated nominal
+    rate × its point's ``speed_scale``); parked pods carry rate 0 and
+    therefore receive share 0 from the rate-weighted splitter."""
+    ops: tuple[PodOperatingPoint, ...]
+    rates: tuple[float, ...]
+    work_units: float
+    makespan: float            # predicted flush makespan (s, modeled)
+    energy: float              # predicted flush energy (J, modeled)
+    feasible: bool             # predicted makespan meets the latency SLO
+
+    @property
+    def power(self) -> float:
+        return self.energy / max(self.makespan, 1e-12)
+
+
+def evaluate_operating_points(work_units: float,
+                              base_rates: Sequence[float],
+                              ops: Sequence[PodOperatingPoint],
+                              slo_s: float = float("inf"),
+                              wake_J: float = 0.0
+                              ) -> GovernorDecision | None:
+    """Predict makespan/energy of one fixed per-pod placement under the
+    rate-weighted split (busy pods finish together at ``work / Σ rates``).
+
+    ``wake_J`` is a fixed per-flush cost per *active* pod (cluster wake +
+    DVFS transition).  It is what makes placement work-dependent: running
+    energy is linear in ``work_units`` so the cheapest frequency mix would
+    otherwise be the same for a cached-stream trickle as for a keyframe
+    burst, but a fixed activation cost tips tiny flushes toward fewer
+    (LITTLE) pods while leaving big flushes to the frequency tradeoff.
+    Returns None when no pod takes work (all parked / zero base rate)."""
+    rates = tuple(float(r) * op.speed_scale
+                  for r, op in zip(base_rates, ops))
+    total_rate = sum(rates)
+    if total_rate <= 0:
+        return None
+    t = float(work_units) / total_rate
+    n_active = sum(1 for r in rates if r > 0)
+    power = (sum(op.idle_power for op in ops)
+             + sum(op.active_power
+                   for op, r in zip(ops, rates) if r > 0))
+    return GovernorDecision(tuple(ops), rates, float(work_units), t,
+                            power * t + wake_J * n_active, t <= slo_s)
+
+
+def select_operating_points(work_units: float,
+                            base_rates: Sequence[float],
+                            ladders: Sequence[tuple[PodOperatingPoint, ...]],
+                            slo_s: float, wake_J: float = 0.0,
+                            max_configs: int = 20000) -> GovernorDecision:
+    """Pick per-pod operating points (including parking) that minimize
+    modeled energy subject to the latency SLO — the paper's Table-I
+    selection transplanted to the serving loop.
+
+    Exhausts the cartesian product of per-pod ladders (+ parked) when it is
+    small; beyond ``max_configs`` each ladder is thinned to its top/bottom
+    rungs + parked (the extremes dominate the Pareto set under the affine
+    power model).  If no placement meets the SLO the fastest one wins —
+    race-to-idle is the correct degradation for bursts."""
+    cands = []
+    n = 1
+    for lad in ladders:
+        n *= len(lad) + 1
+    for lad in ladders:
+        thin = lad if n <= max_configs else (lad[0], lad[-1])
+        cands.append(tuple(thin) + (parked_point(lad),))
+    best = best_any = None
+
+    def key(d: GovernorDecision):
+        return (round(d.energy, 9), d.makespan)
+
+    for combo in itertools.product(*cands):
+        d = evaluate_operating_points(work_units, base_rates, combo, slo_s,
+                                      wake_J)
+        if d is None:
+            continue
+        if best_any is None or (d.makespan, d.energy) < (best_any.makespan,
+                                                         best_any.energy):
+            best_any = d
+        if d.feasible and (best is None or key(d) < key(best)):
+            best = d
+    if best is None and best_any is None:
+        raise ValueError("no pod has a positive rate")
+    return best if best is not None else best_any
 
 
 def optimal_operating_point(points: Sequence[DVFSPoint],

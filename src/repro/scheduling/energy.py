@@ -27,7 +27,8 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 
 __all__ = ["CorePowerModel", "odroid_xu4", "rpi3b", "tpu_v5e_pod",
-           "EXYNOS_BIG_FREQS", "EXYNOS_LITTLE_FREQS"]
+           "EXYNOS_BIG_FREQS", "EXYNOS_LITTLE_FREQS", "PodOperatingPoint",
+           "pod_operating_points", "parked_point", "EnergyAccount"]
 
 # Exynos 5422 published DVFS voltage steps (V) per frequency (GHz).
 _A15_VOLTS = {2.0: 1.3625, 1.8: 1.2625, 1.5: 1.075, 1.2: 1.0125,
@@ -109,6 +110,103 @@ def rpi3b(f: float = 1.4) -> Platform:
     if f != 1.4:
         p = p.with_freqs(**{"cortex-a53": f})
     return p
+
+
+# ---------------------------------------------------- serving pod DVFS state
+@dataclass(frozen=True)
+class PodOperatingPoint:
+    """One DVFS state of a serving pod (a whole cluster acting as one unit).
+
+    ``speed_scale`` multiplies the pod's *nominal* (top-frequency) measured
+    rate — it is a pure frequency ratio, so a pod's calibrated work-units/s
+    baseline stays the single source of absolute throughput.  ``idle_power``
+    is the pod's share of board static draw, paid whether or not the pod
+    runs work this flush (parking a pod saves its active power only)."""
+    name: str
+    freq: float            # GHz (0.0 = parked)
+    speed_scale: float     # throughput multiplier vs the pod's top rung
+    active_power: float    # W while the whole pod is busy at this point
+    idle_power: float      # W drawn regardless of placement
+
+
+def parked_point(ladder: tuple[PodOperatingPoint, ...]) -> PodOperatingPoint:
+    """The 'no work placed here' pseudo-point of a pod's ladder: zero rate,
+    zero active power, but still drawing its static share."""
+    return PodOperatingPoint("parked", 0.0, 0.0, 0.0, ladder[0].idle_power)
+
+
+def pod_operating_points(cluster: str = "big",
+                         idle_power: float | None = None
+                         ) -> tuple[PodOperatingPoint, ...]:
+    """DVFS ladder of one serving pod, derived from the calibrated Exynos
+    cluster models: ``cluster='big'`` sweeps the paper's A15 frequencies
+    (§7.4), ``'LITTLE'`` the A7 ladder.  Descending frequency; the first
+    entry is the top rung (``speed_scale == 1.0``).  ``idle_power`` defaults
+    to an even split of the board's static draw across its clusters."""
+    plat = odroid_xu4()
+    cm = plat.cluster("big" if cluster == "big" else "LITTLE")
+    freqs = EXYNOS_BIG_FREQS if cluster == "big" else EXYNOS_LITTLE_FREQS
+    idle = (plat.idle_power / len(plat.clusters)
+            if idle_power is None else idle_power)
+    return tuple(
+        PodOperatingPoint(f"{cluster}@{f:.1f}GHz", f, f / freqs[0],
+                          cm.at_freq(f).active_power * cm.n, idle)
+        for f in freqs)
+
+
+class EnergyAccount:
+    """Per-pod modeled-energy integrator for the serving governor.
+
+    Charged once per sharded flush (:meth:`charge_shard`): each pod pays
+    its operating point's active power over its busy (simulated) seconds,
+    and every pod — parked or not — pays its idle power over the flush
+    *makespan* (the slowest pod's busy time).  That idle term is what makes
+    race-to-idle real in the model: a slow LITTLE-only placement stretches
+    the window during which the whole board's static draw is attributed to
+    the flush."""
+
+    def __init__(self, n_pods: int):
+        self.active_J = [0.0] * n_pods
+        self.idle_J = [0.0] * n_pods
+        self.busy_s = [0.0] * n_pods
+        self.work_units = [0.0] * n_pods
+        self.op_names = ["-"] * n_pods
+        self.flushes = 0
+        self.slo_met = 0
+        self.makespans: list[float] = []      # per-flush sim makespan (s)
+
+    def charge_shard(self, ops, busy_s, units, slo_s: float | None = None,
+                     wake_J: float = 0.0) -> float:
+        """Account one sharded flush; returns its simulated makespan.
+        ``wake_J`` charges each pod that actually ran work the fixed
+        cluster-wake/DVFS-transition cost the governor planned with."""
+        makespan = max(busy_s, default=0.0)
+        for i, op in enumerate(ops):
+            self.active_J[i] += (op.active_power * busy_s[i]
+                                 + (wake_J if busy_s[i] > 0 else 0.0))
+            self.idle_J[i] += op.idle_power * makespan
+            self.busy_s[i] += busy_s[i]
+            self.work_units[i] += units[i]
+            self.op_names[i] = op.name
+        self.flushes += 1
+        self.makespans.append(makespan)
+        if slo_s is not None and makespan <= slo_s:
+            self.slo_met += 1
+        return makespan
+
+    @property
+    def total_J(self) -> float:
+        return sum(self.active_J) + sum(self.idle_J)
+
+    def summary(self) -> dict:
+        return {
+            "total_J": self.total_J,
+            "active_J": sum(self.active_J),
+            "idle_J": sum(self.idle_J),
+            "flushes": self.flushes,
+            "slo_met_frac": (self.slo_met / self.flushes
+                             if self.flushes else 1.0),
+        }
 
 
 def tpu_v5e_pod(n_chips: int = 256, power_state: float = 1.0) -> Platform:

@@ -49,9 +49,16 @@ class HeteroPodPlan:
 
     @property
     def imbalance(self) -> float:
-        """max finish / ideal finish under the rate model (1.0 = perfect)."""
+        """max finish / ideal finish under the rate model (1.0 = perfect).
+
+        A zero-rate pod holding a positive share never finishes: that is
+        infinite imbalance, not a pod to silently drop from the max."""
+        if any(s > 0 and r <= 0 for s, r in zip(self.shares, self.rates)):
+            return float("inf")
         t = [s / r for s, r in zip(self.shares, self.rates) if r > 0]
-        ideal = sum(self.shares) / sum(self.rates)
+        if not t:
+            return 1.0                        # no work placed anywhere
+        ideal = sum(self.shares) / sum(r for r in self.rates if r > 0)
         return max(t) / ideal if ideal > 0 else 1.0
 
 

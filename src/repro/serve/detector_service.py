@@ -41,6 +41,11 @@ from dataclasses import dataclass, field
 import numpy as np
 
 import repro.plan as planlib
+from repro.scheduling.dvfs import (GovernorDecision,
+                                   evaluate_operating_points,
+                                   select_operating_points)
+from repro.scheduling.energy import (EnergyAccount, parked_point,
+                                     pod_operating_points)
 from repro.scheduling.hetero import (HeteroPodPlan, rate_weighted_split,
                                      replan_on_straggle, update_rates_ema)
 from repro.stream import (StreamConfig, StreamEngine, VideoDetector,
@@ -52,9 +57,15 @@ __all__ = ["PodSpec", "DetectionRequest", "FrameRequest", "StreamSession",
 
 @dataclass(frozen=True)
 class PodSpec:
-    """A simulated processor pod (big.LITTLE cluster at fleet scale)."""
+    """A simulated processor pod (big.LITTLE cluster at fleet scale).
+
+    ``cluster`` keys the pod into the calibrated power model's DVFS
+    ladders (``repro.scheduling.energy.pod_operating_points``): ``"big"``
+    pods sweep the A15 frequencies, ``"LITTLE"`` pods the A7 ladder.  It
+    only matters when the service runs with a governor."""
     name: str
     speed: float = 1.0   # relative nominal throughput (big=1.0, LITTLE<1)
+    cluster: str = "big"
 
 
 @dataclass
@@ -116,6 +127,12 @@ class StreamSession:
         self.video = VideoDetector(service.detector, config,
                                    engine=service.stream_engine)
         self.closed = False
+        # EMA of the fraction of the bucket plan's work this session's
+        # frames actually recompute (1.0 until the first frame lands):
+        # the service's per-frame cost predictor, so a mostly-cached
+        # stream weighs — and is budgeted by the governor — as the tiny
+        # work item it really is, not as a full per-frame detect.
+        self.work_frac = 1.0
 
     def submit_frame(self, frame) -> FrameRequest:
         if self.closed:
@@ -141,11 +158,15 @@ class DetectorService:
     fires when ``max_batch`` requests are queued or ``max_delay_ms`` passed.
     """
 
+    GOVERNORS = (None, "energy", "max", "little")
+
     def __init__(self, detector, pods: tuple[PodSpec, ...] | None = None,
                  max_batch: int = 8, batch_sizes: tuple[int, ...] = (1, 2, 4, 8),
                  max_delay_ms: float = 5.0, strategy: str = "packed",
                  replan_threshold: float = 0.25, rate_ema: float = 0.5,
-                 stream_config: StreamConfig = StreamConfig()):
+                 stream_config: StreamConfig = StreamConfig(),
+                 governor: str | None = None, slo_ms: float = 50.0,
+                 wake_j: float = 0.02):
         self.detector = detector
         self.pods = tuple(pods) if pods else (PodSpec("pod0", 1.0),)
         self.max_batch = max_batch
@@ -155,6 +176,25 @@ class DetectorService:
         self.replan_threshold = replan_threshold
         self.rate_ema = rate_ema
         self.stream_config = stream_config
+        # ---- energy/DVFS governor (paper §7.4 at serving scale).
+        # "energy": pick per-pod operating points + placement each flush to
+        #   meet the latency SLO at minimum modeled energy;
+        # "max"/"little": the static extremes (always top frequency on all
+        #   pods / LITTLE pods only), kept as governed policies so their
+        #   modeled energy is accounted identically and comparable.
+        if governor not in self.GOVERNORS:
+            raise ValueError(f"governor must be one of {self.GOVERNORS}, "
+                             f"got {governor!r}")
+        self.governor = governor
+        self.slo_ms = slo_ms
+        self.wake_j = wake_j     # per-flush pod activation cost (J): what
+        #                          tips tiny (cached-stream) flushes toward
+        #                          LITTLE-only placement
+        self._pod_ladders = tuple(pod_operating_points(p.cluster)
+                                  for p in self.pods)
+        self._energy_acct = (EnergyAccount(len(self.pods))
+                             if governor else None)
+        self._last_decision: GovernorDecision | None = None
         self._stream_engine: StreamEngine | None = None
         self._streams: dict[int, StreamSession] = {}
         self._next_stream_id = 0
@@ -316,28 +356,47 @@ class DetectorService:
                 frames = rest
                 self._shard_across_pods(
                     round_, self._run_stream_shard,
-                    [self._work_units(fr.frame.shape) for fr in round_])
+                    [self._frame_work_units(fr) for fr in round_])
             return len(batch)
 
     def _work_units(self, shape) -> int:
-        """Plan-derived cost weight of one work item: the total pyramid
-        window count of its shape bucket, read off the compiled
-        :class:`repro.plan.CascadePlan` (so a 4x-larger image counts as
-        ~4x the work when splitting a flush across pods, instead of every
-        request counting as one unit)."""
+        """Plan-derived cost weight of one work item: lanes × stage depth
+        summed over the compiled :class:`repro.plan.CascadePlan`'s segments
+        (``plan.work_units``) of its shape bucket — so a 4x-larger image
+        counts as ~4x the work when splitting a flush across pods, and a
+        deep compacted tail counts more than its window count alone.  The
+        same units feed the energy governor's makespan/energy predictions
+        and the calibrated power model."""
         det = self.detector
         hp, wp = det._bucket_hw(int(shape[0]), int(shape[1]))
-        return max(det.batch_plan(hp, wp).n_windows_total, 1)
+        return max(det.batch_plan(hp, wp).work_units, 1)
+
+    def _frame_work_units(self, fr: FrameRequest) -> int:
+        """Predicted cost of one stream frame: the bucket plan's work units
+        scaled by the session's observed recompute fraction (EMA over its
+        ``FrameStats``).  Idle/cached sessions therefore weigh a small
+        fraction of a full detect — which is what lets the governor degrade
+        them to LITTLE placements — while sessions in full-refresh churn
+        weigh ~1.0 and trigger race-to-idle instead."""
+        full = self._work_units(fr.frame.shape)
+        return max(int(full * min(fr.session.work_frac, 1.0)), 1)
 
     def _shard_across_pods(self, items: list, run_fn,
                            weights: list[int]) -> None:
         """Rate-weighted pod loop shared by one-shot and stream work.
 
-        Shares are planned in *window units* (``_work_units`` per item),
+        Shares are planned in *plan work units* (``_work_units`` per item),
         then contiguous runs of items are cut at the unit boundaries, so
-        pods of unequal speed get balanced window counts even when a flush
-        mixes image sizes.  Observed rates are tracked in units/s."""
-        plan = self._plan(int(sum(weights)))
+        pods of unequal speed get balanced work even when a flush mixes
+        image sizes.  Observed rates are tracked in units/s at each pod's
+        *nominal* (top-frequency) operating point; the governor — when one
+        is active — scales them by its chosen per-pod DVFS points, parks
+        pods by giving them rate 0, and the modeled energy of the flush is
+        charged to the :class:`~repro.scheduling.energy.EnergyAccount`."""
+        total_units = int(sum(weights))
+        decision = self._decide(total_units)
+        plan = self._plan(total_units,
+                          decision.rates if decision is not None else None)
         shards: list[list] = []
         unit_sums: list[float] = []
         i = 0
@@ -353,23 +412,103 @@ class DetectorService:
             unit_sums[pi] += sum(weights[i:])
             shards[pi] += items[i:]
         observed = np.zeros(len(self.pods), np.float64)
+        busy_s = [0.0] * len(self.pods)
         for pi, shard in enumerate(shards):
             if not shard:
                 continue
+            builds0 = self._program_build_count()
             t0 = time.perf_counter()
             run_fn(shard)
             wall = max(time.perf_counter() - t0, 1e-9)
             sim = wall / max(self.pods[pi].speed, 1e-9)
+            if decision is not None:
+                # governed: busy time for the energy/SLO ledger comes from
+                # the rate model (units at the chosen point's effective
+                # rate), not the host wall — the ledger is *modeled* energy
+                # (DESIGN.md §2) and wall noise must not make two services
+                # with identical placements charge different joules.
+                if decision.rates[pi] > 0:
+                    busy_s[pi] = unit_sums[pi] / decision.rates[pi]
+            else:
+                busy_s[pi] = sim
+            if self._program_build_count() == builds0:
+                observed[pi] = unit_sums[pi] / sim
+            # else: the wall included first-touch trace/compile of a new
+            # program — a one-off cost that would poison the nominal-rate
+            # EMA and trigger a spurious straggle replan.  Discard the
+            # observation; the next flush of this shape measures warm.
             with self._lock:
                 self._pod_shares[pi] += len(shard)
-                self._pod_sim_time[pi] += sim
-            observed[pi] = unit_sums[pi] / sim
+                self._pod_sim_time[pi] += busy_s[pi]
+        if self._energy_acct is not None and decision is not None:
+            with self._lock:
+                self._energy_acct.charge_shard(decision.ops, busy_s,
+                                               unit_sums,
+                                               slo_s=self.slo_ms / 1e3,
+                                               wake_J=self.wake_j)
+                self._last_decision = decision
         self._update_rates(observed)
 
-    def _plan(self, n: int) -> HeteroPodPlan:
+    def _program_build_count(self) -> int:
+        """Executor program builds so far (detector + shared stream
+        engine): the probe for 'this wall time included jit compile'."""
+        n = self.detector.program_builds
         with self._lock:
-            plan = rate_weighted_split(n, self._rates,
-                                       [p.name for p in self.pods])
+            if self._stream_engine is not None:
+                n += self._stream_engine.program_builds
+        return n
+
+    def _decide(self, total_units: int) -> GovernorDecision | None:
+        """Pick this flush's per-pod operating points under the configured
+        governor (None = ungoverned: every pod at nominal speed)."""
+        if self.governor is None:
+            return None
+        with self._lock:
+            rates = self._rates.copy()
+            in_units = self._rates_in_units
+        if not in_units:
+            # No calibrated units/s yet (pre-warmup): makespan and joule
+            # predictions would be charged against *relative* pod speeds —
+            # meaningless absolute numbers.  Run this flush ungoverned
+            # (nominal split at top frequency, nothing charged); the first
+            # warm observation or warmup()/seed_rates() turns the
+            # governor on.
+            return None
+        tops = tuple(lad[0] for lad in self._pod_ladders)
+        if self.governor == "little":
+            ops = tuple(lad[0] if p.cluster == "LITTLE" else parked_point(lad)
+                        for p, lad in zip(self.pods, self._pod_ladders))
+            if all(op.speed_scale == 0.0 for op in ops):
+                ops = tops               # no LITTLE pods: degenerate to max
+        elif self.governor == "max":
+            ops = tops
+        else:
+            return select_operating_points(total_units, rates,
+                                           self._pod_ladders,
+                                           self.slo_ms / 1e3, self.wake_j)
+        d = evaluate_operating_points(total_units, rates, ops,
+                                      self.slo_ms / 1e3, self.wake_j)
+        if d is None:                    # all rates zero: nominal split
+            return None
+        return d
+
+    def seed_rates(self, rates) -> None:
+        """Install calibrated per-pod rates (work-units/s at each pod's
+        nominal operating point) directly — the benchmark/test shortcut for
+        sharing one ``warmup()`` measurement across several services."""
+        rates = np.asarray(rates, np.float64)
+        if rates.shape != (len(self.pods),) or (rates < 0).any():
+            raise ValueError(f"need {len(self.pods)} non-negative rates, "
+                             f"got {rates!r}")
+        with self._lock:
+            self._rates = rates
+            self._rates_in_units = True
+
+    def _plan(self, n: int, rates=None) -> HeteroPodPlan:
+        with self._lock:
+            plan = rate_weighted_split(
+                n, self._rates if rates is None else rates,
+                [p.name for p in self.pods])
             self._last_plan = plan
         return plan
 
@@ -389,6 +528,12 @@ class DetectorService:
                 self._rates_in_units = True
             self._rates = update_rates_ema(self._rates, observed,
                                            self.rate_ema)
+            if self.governor is not None:
+                # a governor re-decides placement every flush, and the
+                # plan's rates are effective (DVFS-scaled) while _rates are
+                # nominal — drift between the two scales is by design, not
+                # straggle, so the replan bookkeeping is meaningless here
+                return
             new = replan_on_straggle(self._last_plan, self._rates,
                                      self.replan_threshold) \
                 if self._last_plan is not None else None
@@ -437,6 +582,10 @@ class DetectorService:
                                               - stats.windows_recomputed)
                     self._levels_total += stats.levels_total
                     self._levels_active += stats.levels_active
+                    frac = (stats.windows_recomputed
+                            / max(stats.windows_total, 1))
+                    sess = req.session
+                    sess.work_frac = 0.5 * sess.work_frac + 0.5 * frac
         req.done.set()
 
     # ---------------------------------------------------------- stream run
@@ -590,9 +739,10 @@ class DetectorService:
                 "level_skip_frac": (1.0 - self._levels_active
                                     / max(self._levels_total, 1)),
             }
+            energy = self._energy_stats_locked(n_done)
         total_sim = pod_sim.sum()
         pods = [{
-            "name": p.name, "speed": p.speed,
+            "name": p.name, "speed": p.speed, "cluster": p.cluster,
             "rate": float(rates[i]),
             "images": int(pod_shares[i]),
             "sim_time_s": float(pod_sim[i]),
@@ -619,4 +769,33 @@ class DetectorService:
             "last_plan": (dict(zip(last_plan.pod_names, last_plan.shares))
                           if last_plan else {}),
             "stream": stream,
+            "energy": energy,
         }
+
+    def _energy_stats_locked(self, n_done: int) -> dict:
+        """The ``stats()["energy"]`` section (caller holds ``_lock``):
+        modeled joules, J/detection, SLO compliance, and the per-pod
+        operating points the governor chose from plan work units."""
+        if self._energy_acct is None:
+            return {"governor": None}
+        acct = self._energy_acct
+        out = {"governor": self.governor, "slo_ms": self.slo_ms}
+        out.update(acct.summary())
+        out["J_per_detection"] = acct.total_J / max(n_done, 1)
+        out["sim_makespan_p95_ms"] = (
+            float(np.percentile(np.asarray(acct.makespans) * 1e3, 95))
+            if acct.makespans else 0.0)
+        out["pods"] = [{
+            "name": p.name, "cluster": p.cluster, "op": acct.op_names[i],
+            "active_J": acct.active_J[i], "idle_J": acct.idle_J[i],
+            "busy_s": acct.busy_s[i], "work_units": acct.work_units[i],
+        } for i, p in enumerate(self.pods)]
+        d = self._last_decision
+        out["last_decision"] = ({
+            "ops": [op.name for op in d.ops],
+            "work_units": d.work_units,
+            "predicted_makespan_ms": d.makespan * 1e3,
+            "predicted_energy_J": d.energy,
+            "feasible": d.feasible,
+        } if d is not None else {})
+        return out

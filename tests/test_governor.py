@@ -1,0 +1,182 @@
+"""Energy-aware serving governor: DVFS ladders from the calibrated Exynos
+model, per-flush operating-point selection (SLO-feasible minimum modeled
+energy), the two policy archetypes the paper motivates (race-to-idle for
+bursts, degrade-to-LITTLE for trickles), and the per-pod energy ledger the
+service exposes through ``stats()["energy"]``."""
+
+import numpy as np
+import pytest
+
+from repro.scheduling import (EnergyAccount, PodOperatingPoint,
+                              evaluate_operating_points, parked_point,
+                              pod_operating_points, select_operating_points)
+
+BIG = pod_operating_points("big")
+LITTLE = pod_operating_points("LITTLE")
+
+
+# ------------------------------------------------------------- the ladders
+def test_ladders_descend_from_calibrated_tops():
+    for ladder, top_f in ((BIG, 2.0), (LITTLE, 1.4)):
+        assert ladder[0].freq == top_f
+        assert ladder[0].speed_scale == pytest.approx(1.0)
+        freqs = [op.freq for op in ladder]
+        assert freqs == sorted(freqs, reverse=True)
+        # V²f scaling: lower rungs are both slower and cheaper
+        for hi, lo in zip(ladder, ladder[1:]):
+            assert lo.speed_scale < hi.speed_scale
+            assert lo.active_power < hi.active_power
+        assert all(op.idle_power == ladder[0].idle_power for op in ladder)
+    # the paper's asymmetry: LITTLE's top rung is far cheaper than big's
+    assert LITTLE[0].active_power < 0.25 * BIG[0].active_power
+
+
+def test_parked_point_keeps_static_share_only():
+    p = parked_point(BIG)
+    assert p.speed_scale == 0.0
+    assert p.active_power == 0.0
+    assert p.idle_power == BIG[0].idle_power
+
+
+# ----------------------------------------------- placement model/selection
+def test_evaluate_matches_hand_computation():
+    ops = (BIG[0], parked_point(LITTLE))
+    d = evaluate_operating_points(100.0, (50.0, 20.0), ops, slo_s=3.0,
+                                  wake_J=0.5)
+    assert d.rates == (50.0, 0.0)
+    assert d.makespan == pytest.approx(2.0)
+    power = BIG[0].active_power + BIG[0].idle_power + LITTLE[0].idle_power
+    assert d.energy == pytest.approx(power * 2.0 + 0.5)   # one active pod
+    assert d.feasible
+    assert evaluate_operating_points(
+        100.0, (50.0, 20.0), ops, slo_s=1.0).feasible is False
+    # everything parked -> no decision
+    assert evaluate_operating_points(
+        100.0, (50.0, 20.0), (parked_point(BIG), parked_point(LITTLE)),
+        slo_s=3.0) is None
+
+
+def test_governor_never_beaten_by_feasible_static_extreme():
+    ladders = (BIG, LITTLE)
+    rates = (60.0, 27.0)
+    for work in (5.0, 50.0, 500.0):
+        for slo in (0.05, 0.5, 5.0, float("inf")):
+            gov = select_operating_points(work, rates, ladders, slo,
+                                          wake_J=0.02)
+            for ops in ((BIG[0], LITTLE[0]),                  # always-max
+                        (parked_point(BIG), LITTLE[0])):      # LITTLE-only
+                ext = evaluate_operating_points(work, rates, ops, slo, 0.02)
+                if ext is not None and ext.feasible:
+                    assert gov.feasible
+                    assert gov.energy <= ext.energy + 1e-9
+
+
+def test_degrade_to_little_for_trickle_race_for_burst():
+    """The two serving archetypes: a cached-stream trickle under a loose
+    SLO runs on LITTLE alone (big parked); a keyframe burst under the same
+    SLO spreads across clusters at higher frequency."""
+    ladders = (BIG, LITTLE)
+    # measured rates: the big pod underdelivers its nominal 2.22x edge
+    # (memory-bound phases), which is exactly when LITTLE pays off
+    rates = (50.0, 27.0)
+    trickle = select_operating_points(0.5, rates, ladders, slo_s=5.0,
+                                      wake_J=0.02)
+    assert trickle.ops[0].speed_scale == 0.0          # big parked
+    assert trickle.ops[1].freq > 0
+    burst = select_operating_points(300.0, rates, ladders, slo_s=5.0,
+                                    wake_J=0.02)
+    assert burst.feasible
+    assert burst.ops[0].speed_scale > 0               # big must help
+    assert burst.energy > trickle.energy
+
+
+def test_infeasible_slo_falls_back_to_race_to_idle():
+    ladders = (BIG, LITTLE)
+    gov = select_operating_points(1000.0, (60.0, 27.0), ladders,
+                                  slo_s=1e-6, wake_J=0.02)
+    assert not gov.feasible
+    # fastest possible placement: everything at the top rung
+    assert gov.ops[0] is BIG[0] and gov.ops[1] is LITTLE[0]
+    with pytest.raises(ValueError):
+        select_operating_points(10.0, (0.0, 0.0), ladders, slo_s=1.0)
+
+
+def test_tight_slo_escalates_frequency():
+    ladders = (BIG,)
+    rates = (60.0,)
+    loose = select_operating_points(30.0, rates, ladders, slo_s=10.0)
+    tight = select_operating_points(30.0, rates, ladders, slo_s=0.51)
+    assert loose.ops[0].freq < tight.ops[0].freq
+    assert loose.energy < tight.energy
+    assert tight.feasible and loose.feasible
+
+
+# ------------------------------------------------------------- the ledger
+def test_energy_account_arithmetic():
+    acct = EnergyAccount(2)
+    ops = (BIG[2], LITTLE[0])          # big@1.0GHz + LITTLE@1.4GHz
+    acct.charge_shard(ops, busy_s=[2.0, 4.0], units=[20, 10], slo_s=5.0,
+                      wake_J=0.1)
+    assert acct.flushes == 1 and acct.slo_met == 1
+    assert acct.makespans == [4.0]
+    assert acct.active_J[0] == pytest.approx(ops[0].active_power * 2 + 0.1)
+    assert acct.active_J[1] == pytest.approx(ops[1].active_power * 4 + 0.1)
+    # idle is paid over the makespan by every pod, busy or not
+    assert acct.idle_J[0] == pytest.approx(ops[0].idle_power * 4.0)
+    acct.charge_shard((parked_point(BIG), LITTLE[0]), busy_s=[0.0, 10.0],
+                      units=[0, 5], slo_s=5.0, wake_J=0.1)
+    assert acct.slo_met == 1                      # second flush missed
+    assert acct.active_J[0] == pytest.approx(    # parked: no wake, no work
+        ops[0].active_power * 2 + 0.1)
+    s = acct.summary()
+    assert s["flushes"] == 2
+    assert s["slo_met_frac"] == pytest.approx(0.5)
+    assert s["total_J"] == pytest.approx(acct.total_J)
+    assert acct.total_J == pytest.approx(sum(acct.active_J)
+                                         + sum(acct.idle_J))
+
+
+# -------------------------------------------------- service integration
+def test_service_reports_energy_stats():
+    from repro.core import Detector, EngineConfig, paper_shaped_cascade
+    from repro.core.training.data import render_scene
+    from repro.serve import DetectorService, PodSpec
+
+    det = Detector(paper_shaped_cascade(0, stage_sizes=[3, 4, 5, 6]),
+                   EngineConfig(mode="wave", pad_multiple=32, step=2,
+                                scale_factor=1.3, min_neighbors=2))
+    rng = np.random.default_rng(5)
+    imgs = [render_scene(rng, 64, 64, n_faces=1)[0] for _ in range(4)]
+
+    off = DetectorService(det)
+    off.detect_many(imgs)
+    assert off.stats()["energy"] == {"governor": None}
+
+    svc = DetectorService(det, pods=(PodSpec("big", 1.0, "big"),
+                                     PodSpec("little", 0.45, "LITTLE")),
+                          governor="energy", slo_ms=200.0)
+    svc.seed_rates([400.0, 180.0])
+    got = svc.detect_many(imgs)
+    for im, rects in zip(imgs, got):
+        assert np.array_equal(rects, det.detect(im))
+    en = svc.stats()["energy"]
+    assert en["governor"] == "energy"
+    assert en["total_J"] > 0
+    assert en["flushes"] >= 1
+    assert 0.0 <= en["slo_met_frac"] <= 1.0
+    assert en["J_per_detection"] > 0
+    pods = en["pods"]
+    assert [p["cluster"] for p in pods] == ["big", "LITTLE"]
+    for p in pods:
+        assert p["op"] == "-" or "@" in p["op"] or p["op"] == "parked"
+    # the flush's decision came off plan work units at the seeded rates
+    d = en["last_decision"]
+    assert d is not None
+    assert d["work_units"] == sum(svc._work_units(im.shape) for im in imgs)
+    assert d["predicted_energy_J"] > 0
+    assert len(d["ops"]) == 2
+
+    with pytest.raises(ValueError):
+        DetectorService(det, governor="bogus")
+    with pytest.raises(ValueError):
+        svc.seed_rates([1.0])

@@ -260,9 +260,27 @@ def test_service_work_units_read_off_plan():
     svc = DetectorService(det)
     units_small = svc._work_units((64, 64))
     units_big = svc._work_units((100, 90))
-    assert units_small == det.batch_plan(64, 64).n_windows_total
-    assert units_big == det.batch_plan(128, 96).n_windows_total
+    assert units_small == det.batch_plan(64, 64).work_units
+    assert units_big == det.batch_plan(128, 96).work_units
     assert units_big > units_small
+
+
+def test_plan_work_units_weight_lanes_by_stage_depth():
+    plan = planlib.compile_plan(CFG, N_STAGES, 64, 64, batch=1)
+    per_seg = planlib.segment_work_units(plan)
+    assert len(per_seg) == len(plan.segments)
+    assert plan.work_units == sum(per_seg)
+    dense_lanes = plan.n_slots * plan.batch
+    for seg, units in zip(plan.segments, per_seg):
+        lanes = dense_lanes if seg.dense else min(seg.capacity, dense_lanes)
+        assert units == lanes * (seg.s1 - seg.s0)
+        assert units > 0
+    # stage-depth weighting: total work strictly exceeds the stage-1
+    # window count whenever the cascade has more than one stage
+    assert plan.work_units > plan.n_windows_total
+    # batch scales every dense segment linearly
+    plan2 = planlib.compile_plan(CFG, N_STAGES, 64, 64, batch=2)
+    assert plan2.work_units > plan.work_units
 
 
 def test_service_weighted_sharding_completes_all_items():

@@ -107,6 +107,32 @@ def test_rate_weighted_split_exact_and_fair(n, rates, quantum):
         assert shares[-1] >= shares[0] - quantum
 
 
+def test_rate_weighted_split_quantum_larger_than_items():
+    """quantum > n_items: every base share rounds to 0 and the whole
+    flush is the sub-quantum leftover — it must land on the fastest pod,
+    never vanish."""
+    plan = rate_weighted_split(3, [1.0, 2.0], quantum=8)
+    assert plan.shares == (0, 3)
+    assert sum(plan.shares) == 3
+    assert plan.quantum == 8
+    assert plan.imbalance > 0
+
+
+def test_rate_weighted_split_zero_rate_pod_gets_nothing():
+    """A dead pod (rate 0) mixed with live ones takes no share, and the
+    plan stays well-formed (finite imbalance, exact sum)."""
+    plan = rate_weighted_split(64, [2.0, 0.0, 1.0], quantum=4)
+    assert plan.shares[1] == 0
+    assert sum(plan.shares) == 64
+    assert np.isfinite(plan.imbalance)
+    # replanning such a plan keeps both invariants
+    new = replan_on_straggle(plan, [2.0, 0.0, 0.4])
+    assert new is not None
+    assert new.quantum == 4
+    assert new.shares[1] == 0
+    assert sum(new.shares) == 64
+
+
 def test_replan_on_straggle_triggers_only_on_drift():
     plan = rate_weighted_split(256, [1.0, 1.0], quantum=8)
     assert replan_on_straggle(plan, [1.0, 0.99]) is None

@@ -2,6 +2,8 @@
 ``detect_batch`` -> per-request decode, plus the rate-weighted pod
 scheduling loop (calibration, EMA rate tracking, straggler replanning)."""
 
+import time
+
 import numpy as np
 import pytest
 
@@ -118,6 +120,53 @@ def test_rate_update_and_replan():
     skew = rate_weighted_split(8, [3.0, 1.0], ["big", "little"])
     assert skew.shares == (6, 2)
     assert skew.imbalance == pytest.approx(1.0)
+
+
+def test_imbalance_infinite_when_loaded_pod_has_zero_rate():
+    """Regression: a pod whose measured rate collapsed to 0 while still
+    holding work never finishes — imbalance must be inf, not a silently
+    dropped term that makes the plan look balanced."""
+    from repro.scheduling.hetero import HeteroPodPlan
+    dead = HeteroPodPlan(("big", "little"), (1.0, 0.0), (4, 4))
+    assert dead.imbalance == float("inf")
+    # ... but a zero-rate pod with zero share is fine (it was parked)
+    parked = HeteroPodPlan(("big", "little"), (1.0, 0.0), (8, 0))
+    assert np.isfinite(parked.imbalance)
+    assert parked.imbalance == pytest.approx(1.0)
+    # degenerate no-work plan stays defined
+    empty = HeteroPodPlan(("big",), (0.0,), (0,))
+    assert empty.imbalance == pytest.approx(1.0)
+
+
+def test_first_flush_compile_wall_does_not_poison_rates(detector):
+    """Regression: the first flush of a new batch shape pays jit
+    trace/compile inside the measured wall.  That observation must be
+    discarded — only warm walls may move the rate EMA."""
+    svc = DetectorService(detector, pods=(PodSpec("big", 1.0),
+                                          PodSpec("little", 0.5)),
+                          rate_ema=0.5)
+    items = list(range(8))
+    weights = [10] * len(items)
+
+    def compiling_run(shard):
+        svc.detector.program_builds += 1     # first-touch program build
+        time.sleep(0.02)                     # the compile wall
+
+    before = svc._rates.copy()
+    svc._shard_across_pods(items, compiling_run, weights)
+    assert np.array_equal(svc._rates, before)       # discarded
+    assert not svc._rates_in_units
+
+    def warm_run(shard):
+        time.sleep(0.002)
+
+    svc._shard_across_pods(items, warm_run, weights)
+    assert svc._rates_in_units                      # first warm wall lands
+    first = svc._rates.copy()
+    assert (first > 0).all()
+    for _ in range(3):                              # stable under repeats
+        svc._shard_across_pods(items, warm_run, weights)
+    assert ((svc._rates > first * 0.2) & (svc._rates < first * 5)).all()
 
 
 def test_service_replans_on_straggle(detector, images):
