@@ -68,7 +68,7 @@ def run_serving(fast: bool = False) -> list[dict]:
     import numpy as np
 
     from repro.core import Detector, EngineConfig, paper_shaped_cascade
-    from repro.serve import DetectorService, PodSpec
+    from repro.serve import DetectorService, PodSpec, ServiceConfig
 
     hw = 64 if fast else 96
     casc = paper_shaped_cascade(0, stage_sizes=[4, 6, 8, 10, 12])
@@ -89,7 +89,8 @@ def run_serving(fast: bool = False) -> list[dict]:
             svc.flush()
 
     # one warm pass: calibrate, compile every batch shape, measure rates
-    warm = DetectorService(det, pods=pods, governor="max", slo_ms=1e9)
+    warm = DetectorService(det, ServiceConfig(pods=pods, governor="max",
+                                              slo_ms=1e9))
     warm.warmup(images[0])
     play(warm)
     play(warm)
@@ -110,31 +111,30 @@ def run_serving(fast: bool = False) -> list[dict]:
             # every policy plans against the exact same rates, so the
             # policies' modeled energy/compliance differ only by their
             # placement decisions (a controlled comparison, no wall noise)
-            svc = DetectorService(det, pods=pods, governor=policy,
-                                  slo_ms=slo_ms, rate_ema=0.0)
+            svc = DetectorService(det, ServiceConfig(
+                pods=pods, governor=policy, slo_ms=slo_ms, rate_ema=0.0))
             svc.seed_rates(rates)
             play(svc)
-            st = svc.stats()
-            en = st["energy"]
+            en = svc.stats().energy
             by_policy[policy] = en
             rows.append({
                 "mode": "serving", "policy": policy,
                 "config": f"serving {policy} (slo {k:.1f}x)",
                 "slo_ms": slo_ms,
-                "J_per_detection": en["J_per_detection"],
-                "energy_J": en["total_J"],
-                "slo_met_frac": en["slo_met_frac"],
-                "sim_makespan_p95_ms": en["sim_makespan_p95_ms"],
-                "ops": "+".join(p["op"] for p in en["pods"]),
+                "J_per_detection": en.J_per_detection,
+                "energy_J": en.total_J,
+                "slo_met_frac": en.slo_met_frac,
+                "sim_makespan_p95_ms": en.sim_makespan_p95_ms,
+                "ops": "+".join(p.op for p in en.pods),
             })
         gov, mx, lt = (by_policy[p] for p in ("energy", "max", "little"))
         rows.append({
             "mode": "serving_delta", "config": f"— governor vs extremes "
             f"(slo {k:.1f}x)", "slo_ms": slo_ms,
-            "delta_vs_max_pct": 100 * (gov["J_per_detection"]
-                                       / mx["J_per_detection"] - 1),
-            "delta_vs_little_pct": 100 * (gov["J_per_detection"]
-                                          / lt["J_per_detection"] - 1),
+            "delta_vs_max_pct": 100 * (gov.J_per_detection
+                                       / mx.J_per_detection - 1),
+            "delta_vs_little_pct": 100 * (gov.J_per_detection
+                                          / lt.J_per_detection - 1),
         })
     return rows
 

@@ -33,7 +33,7 @@ def _throughput(fn, n_images: int, repeats: int) -> float:
 
 def run(fast: bool = False) -> list[dict]:
     from repro.core import Detector, EngineConfig, paper_shaped_cascade
-    from repro.serve import DetectorService, PodSpec
+    from repro.serve import DetectorService, PodSpec, ServiceConfig
 
     hw = 96
     n_batch = 8
@@ -85,22 +85,23 @@ def run(fast: bool = False) -> list[dict]:
         svc.flush()
 
     pods = (PodSpec("big", 1.0), PodSpec("little", 0.4))
-    play(DetectorService(det, pods=pods, max_batch=n_batch))  # compile pass
-    svc = DetectorService(det, pods=pods, max_batch=n_batch)
+    scfg = ServiceConfig(pods=pods, max_batch=n_batch)
+    play(DetectorService(det, scfg))                    # compile pass
+    svc = DetectorService(det, scfg)
     play(svc)                                           # warm measurements
     st = svc.stats()
     rows += [
-        {"metric": "service completed", "value": st["n_done"], "unit": "imgs"},
-        {"metric": "service latency p50", "value": st["latency_ms_p50"],
+        {"metric": "service completed", "value": st.n_done, "unit": "imgs"},
+        {"metric": "service latency p50", "value": st.latency_ms_p50,
          "unit": "ms"},
-        {"metric": "service latency p95", "value": st["latency_ms_p95"],
+        {"metric": "service latency p95", "value": st.latency_ms_p95,
          "unit": "ms"},
         {"metric": "pod shares (rate-weighted)",
-         "value": "/".join(f"{p['name']}:{p['images']}" for p in st["pods"]),
+         "value": "/".join(f"{p.name}:{p.images}" for p in st.pods),
          "unit": "imgs"},
         {"metric": "pod makespan imbalance", "value":
-         st["makespan_imbalance"], "unit": "x (1.0 = balanced)"},
-        {"metric": "straggle replans", "value": st["replans"], "unit": "-"},
+         st.makespan_imbalance, "unit": "x (1.0 = balanced)"},
+        {"metric": "straggle replans", "value": st.replans, "unit": "-"},
     ]
     return rows
 

@@ -28,6 +28,7 @@ BENCHES = [
     ("bench_detector", "Tables II/III — ours vs dense reference"),
     ("bench_serving", "batched detection serving: throughput + latency"),
     ("bench_video", "streaming video: tile-reuse vs per-frame detection"),
+    ("bench_fleet", "fleet-scale multi-tenant streams: tiers + admission"),
     ("bench_roofline", "roofline table from dry-run artifacts"),
 ]
 
@@ -64,6 +65,7 @@ def main() -> None:
 
 def _write_artifact(out_dir: str, name: str, fast: bool, rows) -> None:
     short = name.removeprefix("bench_")
+    os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{short}.json")
     with open(path, "w") as f:
         json.dump({"bench": name, "fast": fast,

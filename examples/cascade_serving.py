@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.core import Detector, EngineConfig, paper_shaped_cascade
 from repro.core.training.data import render_scene
-from repro.serve import DetectorService, PodSpec
+from repro.serve import DetectorService, PodSpec, ServiceConfig
 
 
 def main() -> None:
@@ -22,9 +22,8 @@ def main() -> None:
     shapes = [(96, 96)] * 6 + [(70, 90), (100, 60)]
     images = [render_scene(rng, h, w, n_faces=1)[0] for h, w in shapes]
 
-    svc = DetectorService(det, pods=(PodSpec("big", 1.0),
-                                     PodSpec("little", 0.4)),
-                          max_batch=8)
+    svc = DetectorService(det, ServiceConfig(
+        pods=(PodSpec("big", 1.0), PodSpec("little", 0.4)), max_batch=8))
     svc.warmup(images[0])          # profile-guided capacities + pod rates
     print(f"calibrated capacity fracs: "
           f"{[round(f, 3) for f in svc.detector.config.capacity_fracs]}")
@@ -36,12 +35,12 @@ def main() -> None:
               f"batched==sequential: {same}")
 
     st = svc.stats()
-    print(f"\nthroughput: {st['imgs_per_s']:.1f} imgs/s, "
-          f"latency p50/p95: {st['latency_ms_p50']:.0f}/"
-          f"{st['latency_ms_p95']:.0f} ms")
+    print(f"\nthroughput: {st.imgs_per_s:.1f} imgs/s, "
+          f"latency p50/p95: {st.latency_ms_p50:.0f}/"
+          f"{st.latency_ms_p95:.0f} ms")
     print("pod shares (rate-weighted):",
-          {p["name"]: p["images"] for p in st["pods"]},
-          f"imbalance {st['makespan_imbalance']:.2f}x")
+          {p.name: p.images for p in st.pods},
+          f"imbalance {st.makespan_imbalance:.2f}x")
 
 
 if __name__ == "__main__":

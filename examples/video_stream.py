@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.core import Detector, EngineConfig
 from repro.configs.viola_jones import pretrained
-from repro.serve import DetectorService, PodSpec
+from repro.serve import DetectorService, PodSpec, ServiceConfig
 from repro.stream import StreamConfig, VideoDetector, make_video
 
 
@@ -33,10 +33,10 @@ def main() -> None:
               f"faces {len(rects)}")
 
     print("\n== concurrent streams through DetectorService ==")
-    svc = DetectorService(det, pods=(PodSpec("big", 1.0),
-                                     PodSpec("little", 0.4)),
-                          stream_config=StreamConfig(tile=20, threshold=0.0,
-                                                     keyframe_interval=8))
+    svc = DetectorService(det, ServiceConfig(
+        pods=(PodSpec("big", 1.0), PodSpec("little", 0.4)),
+        stream_config=StreamConfig(tile=20, threshold=0.0,
+                                   keyframe_interval=8)))
     videos = [make_video("static_cctv", n_frames=6, h=160, w=160, seed=s)
               for s in (0, 1, 2)]
     sessions = [svc.open_stream() for _ in videos]
@@ -46,12 +46,12 @@ def main() -> None:
     for r in reqs:
         r.result()
     st = svc.stats()
-    print(f"frames done: {st['stream']['frames_done']}  "
-          f"modes: {st['stream']['frame_modes']}  "
-          f"window skip: {st['stream']['window_skip_frac']:.2f}  "
-          f"level skip: {st['stream']['level_skip_frac']:.2f}")
-    print(f"p50 {st['latency_ms_p50']:.1f} ms  p95 {st['latency_ms_p95']:.1f} "
-          f"ms  pods: {[(p['name'], p['images']) for p in st['pods']]}")
+    print(f"frames done: {st.stream.frames_done}  "
+          f"modes: {st.stream.frame_modes}  "
+          f"window skip: {st.stream.window_skip_frac:.2f}  "
+          f"level skip: {st.stream.level_skip_frac:.2f}")
+    print(f"p50 {st.latency_ms_p50:.1f} ms  p95 {st.latency_ms_p95:.1f} "
+          f"ms  pods: {[(p.name, p.images) for p in st.pods]}")
 
 
 if __name__ == "__main__":

@@ -65,4 +65,37 @@ print(f"governor Pareto OK: dominates-or-ties both extremes at "
       f"{wins}/{len(by_slo)} SLO points")
 EOF
 
+echo "=== smoke: bench_fleet (multi-tenant tiers + admission + ladder, fast) ==="
+python -m benchmarks.run --fast --only bench_fleet --artifacts .
+python - <<'EOF'
+# Tier contract from BENCH_fleet.json: under overload (2x) the realtime
+# tier's p95 must stay at or under best-effort's, realtime must meet its
+# SLO, no frame may be dropped before the degradation ladder is exhausted,
+# and tiered serving must not cost aggregate throughput vs the no-tier
+# single-flush baseline (2% model tolerance).
+import json
+
+rows = json.load(open("BENCH_fleet.json"))["rows"]
+over = max(r["load"] for r in rows if r.get("mode") == "sim_summary")
+assert over >= 2.0, f"no overload point in BENCH_fleet.json (max {over}x)"
+tiers = {r["tier"]: r for r in rows
+         if r.get("mode") == "sim" and r["load"] == over}
+assert tiers["realtime"]["latency_ms_p95"] <= \
+    tiers["best_effort"]["latency_ms_p95"] + 1e-9, \
+    "realtime p95 exceeds best_effort p95 under overload"
+assert tiers["realtime"]["slo_met"], "realtime misses its SLO under overload"
+summ = next(r for r in rows
+            if r.get("mode") == "sim_summary" and r["load"] == over)
+if max(summ["ladder_levels"]) < 3:    # ladder not exhausted -> zero drops
+    assert summ["frames_dropped"] == 0, \
+        "frames dropped before the degradation ladder was exhausted"
+assert summ["windows_per_s"] >= 0.98 * summ["baseline_windows_per_s"], \
+    "tiered fleet throughput fell below the no-tier baseline"
+print(f"fleet tier contract OK at {over}x: rt p95 "
+      f"{tiers['realtime']['latency_ms_p95']:.1f}ms <= be p95 "
+      f"{tiers['best_effort']['latency_ms_p95']:.1f}ms, "
+      f"dropped={summ['frames_dropped']:.0f}, "
+      f"degrade_events={summ['degrade_events']}")
+EOF
+
 echo "CI OK"

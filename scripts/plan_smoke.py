@@ -14,7 +14,7 @@ cascade:
    ladder's backend per tail segment;
 2. a mixed ladder: the plan picks *different* backends at different
    capacities, exactly as ``repro.plan.select_backend`` dictates;
-3. ``DetectorService.warmup(tune_tail=True)``: ``stats()["tail"]`` must
+3. ``DetectorService.warmup(tune_tail=True)``: ``stats().tail`` must
    carry the measured rungs and the plan-chosen per-segment backends of
    the warmed bucket, consistent with the compiled plan.
 
@@ -32,7 +32,7 @@ import repro.plan as planlib  # noqa: E402
 from repro.core import Detector, EngineConfig  # noqa: E402
 from repro.core.training.data import render_scene  # noqa: E402
 from repro.configs.viola_jones import pretrained  # noqa: E402
-from repro.serve import DetectorService  # noqa: E402
+from repro.serve import DetectorService, ServiceConfig  # noqa: E402
 from repro.stream import StreamConfig, VideoDetector, make_video  # noqa: E402
 
 KW = dict(mode="wave", step=2, scale_factor=1.3, min_neighbors=2,
@@ -91,19 +91,20 @@ def check_service_stats(casc) -> None:
     rng = np.random.default_rng(1)
     probe = render_scene(rng, 96, 96, n_faces=1)[0]
     det = Detector(casc, EngineConfig(**KW))
-    svc = DetectorService(det, batch_sizes=(1, 2, 4), max_batch=4)
+    svc = DetectorService(det, ServiceConfig(batch_sizes=(1, 2, 4),
+                                             max_batch=4))
     svc.warmup(probe, tune_tail=True)
-    st = svc.stats()["tail"]
+    st = svc.stats().tail
     cfg = svc.detector.config
     assert cfg.tail_backend == "auto" and cfg.tail_rungs
-    assert st["rungs"] == [list(r) for r in cfg.tail_rungs]
-    assert st["chosen"], "warmup must record plan-chosen backends"
+    assert st.rungs == tuple(tuple(r) for r in cfg.tail_rungs)
+    assert st.chosen, "warmup must record plan-chosen backends"
     bplan = svc.detector.batch_plan(96, 96, 4)
-    assert st["chosen"] == [[s.capacity, s.backend]
-                            for s in bplan.tail_segments]
-    for cap, bk in st["chosen"]:
+    assert st.chosen == tuple((s.capacity, s.backend)
+                              for s in bplan.tail_segments)
+    for cap, bk in st.chosen:
         assert bk == planlib.select_backend(cfg, cap)
-    print(f"  service stats: rungs={st['rungs']} chosen={st['chosen']}")
+    print(f"  service stats: rungs={st.rungs} chosen={st.chosen}")
 
 
 def main() -> None:

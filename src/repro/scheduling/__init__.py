@@ -19,7 +19,7 @@ from .energy import (Platform, CorePowerModel, odroid_xu4, rpi3b,  # noqa: F401
                      PodOperatingPoint, pod_operating_points, parked_point,
                      EnergyAccount)
 from .dvfs import (DVFSPoint, dvfs_sweep, optimal_operating_point,  # noqa: F401
-                   GovernorDecision, evaluate_operating_points,
+                   GovernorDecision, binding_slo, evaluate_operating_points,
                    select_operating_points)
 from .autotune import (SweepCell, accuracy_sweep, error_table,  # noqa: F401
                        match_detections)

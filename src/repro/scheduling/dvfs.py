@@ -28,7 +28,7 @@ from .botlev import BotlevScheduler
 from .executor import simulate, SimResult
 
 __all__ = ["DVFSPoint", "dvfs_sweep", "optimal_operating_point",
-           "GovernorDecision", "evaluate_operating_points",
+           "GovernorDecision", "binding_slo", "evaluate_operating_points",
            "select_operating_points"]
 
 
@@ -100,10 +100,23 @@ class GovernorDecision:
         return self.energy / max(self.makespan, 1e-12)
 
 
+def binding_slo(slo_s: "float | Sequence[float]") -> float:
+    """Collapse a tiered SLO input to the flush's *binding* deadline.
+
+    A flush can mix requests from several SLO tiers (realtime / standard /
+    best_effort); the governor must plan against the tightest deadline
+    present, so a sequence of per-tier SLOs reduces to its minimum.  A
+    plain float passes through; an empty sequence means no deadline."""
+    if isinstance(slo_s, (int, float)):
+        return float(slo_s)
+    vals = [float(s) for s in slo_s]
+    return min(vals) if vals else float("inf")
+
+
 def evaluate_operating_points(work_units: float,
                               base_rates: Sequence[float],
                               ops: Sequence[PodOperatingPoint],
-                              slo_s: float = float("inf"),
+                              slo_s: "float | Sequence[float]" = float("inf"),
                               wake_J: float = 0.0
                               ) -> GovernorDecision | None:
     """Predict makespan/energy of one fixed per-pod placement under the
@@ -115,7 +128,10 @@ def evaluate_operating_points(work_units: float,
     otherwise be the same for a cached-stream trickle as for a keyframe
     burst, but a fixed activation cost tips tiny flushes toward fewer
     (LITTLE) pods while leaving big flushes to the frequency tradeoff.
+    ``slo_s`` may be a sequence of per-tier SLOs — the binding (minimum)
+    one is the deadline (:func:`binding_slo`).
     Returns None when no pod takes work (all parked / zero base rate)."""
+    slo_s = binding_slo(slo_s)
     rates = tuple(float(r) * op.speed_scale
                   for r, op in zip(base_rates, ops))
     total_rate = sum(rates)
@@ -133,17 +149,21 @@ def evaluate_operating_points(work_units: float,
 def select_operating_points(work_units: float,
                             base_rates: Sequence[float],
                             ladders: Sequence[tuple[PodOperatingPoint, ...]],
-                            slo_s: float, wake_J: float = 0.0,
+                            slo_s: "float | Sequence[float]",
+                            wake_J: float = 0.0,
                             max_configs: int = 20000) -> GovernorDecision:
     """Pick per-pod operating points (including parking) that minimize
     modeled energy subject to the latency SLO — the paper's Table-I
-    selection transplanted to the serving loop.
+    selection transplanted to the serving loop.  ``slo_s`` accepts a
+    sequence of per-tier SLOs (the binding minimum is used), so a flush
+    mixing realtime and best-effort work plans for the realtime deadline.
 
     Exhausts the cartesian product of per-pod ladders (+ parked) when it is
     small; beyond ``max_configs`` each ladder is thinned to its top/bottom
     rungs + parked (the extremes dominate the Pareto set under the affine
     power model).  If no placement meets the SLO the fastest one wins —
     race-to-idle is the correct degradation for bursts."""
+    slo_s = binding_slo(slo_s)
     cands = []
     n = 1
     for lad in ladders:

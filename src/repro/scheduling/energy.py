@@ -174,12 +174,20 @@ class EnergyAccount:
         self.flushes = 0
         self.slo_met = 0
         self.makespans: list[float] = []      # per-flush sim makespan (s)
+        # per-SLO-tier attainment: tier -> [flushes containing the tier,
+        # flushes where the makespan met *that tier's* SLO]
+        self.tier_flushes: dict[str, int] = {}
+        self.tier_met: dict[str, int] = {}
 
     def charge_shard(self, ops, busy_s, units, slo_s: float | None = None,
-                     wake_J: float = 0.0) -> float:
+                     wake_J: float = 0.0,
+                     tier_slos: "dict[str, float] | None" = None) -> float:
         """Account one sharded flush; returns its simulated makespan.
         ``wake_J`` charges each pod that actually ran work the fixed
-        cluster-wake/DVFS-transition cost the governor planned with."""
+        cluster-wake/DVFS-transition cost the governor planned with.
+        ``tier_slos`` maps each SLO tier present in the flush to its own
+        deadline (s), so attainment is also tracked per tier — a flush can
+        meet its best-effort deadline while missing the realtime one."""
         makespan = max(busy_s, default=0.0)
         for i, op in enumerate(ops):
             self.active_J[i] += (op.active_power * busy_s[i]
@@ -192,11 +200,20 @@ class EnergyAccount:
         self.makespans.append(makespan)
         if slo_s is not None and makespan <= slo_s:
             self.slo_met += 1
+        for tier, tslo in (tier_slos or {}).items():
+            self.tier_flushes[tier] = self.tier_flushes.get(tier, 0) + 1
+            if makespan <= tslo:
+                self.tier_met[tier] = self.tier_met.get(tier, 0) + 1
         return makespan
 
     @property
     def total_J(self) -> float:
         return sum(self.active_J) + sum(self.idle_J)
+
+    def slo_met_by_tier(self) -> dict:
+        """Per-tier SLO attainment over the flushes that carried the tier."""
+        return {t: self.tier_met.get(t, 0) / n
+                for t, n in self.tier_flushes.items() if n}
 
     def summary(self) -> dict:
         return {

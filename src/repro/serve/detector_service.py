@@ -3,7 +3,7 @@
 Request flow (the serving-scale shape of the paper's pipeline)::
 
     submit(image) -> request queue -> shape buckets -> pod shards
-        -> Detector.detect_batch -> per-request rect decode -> Future
+        -> Detector.detect_batch -> per-request rect decode -> Request
 
 Requests are queued, grouped into shape buckets (``EngineConfig.
 pad_multiple``), chopped into sub-batches from ``batch_sizes`` (so the jit
@@ -16,6 +16,26 @@ the pods are simulated (each pod's wall time is scaled by its nominal
 speed), but the shares, imbalance, and replan decisions are exactly what a
 real asymmetric fleet would execute.
 
+The service is configured by one typed, validated
+:class:`ServiceConfig` (``DetectorService(detector, ServiceConfig(...))``);
+legacy keyword construction (``DetectorService(detector, pods=..., ...)``)
+still works for one release behind a :class:`DeprecationWarning`.  Every
+queued item — one-shot image or stream frame — is a :class:`Request`:
+shared completion event, ``result(timeout)``, ``latency_s``, and an SLO
+``tier`` (:data:`SLO_TIERS`).  ``stats()`` returns a typed, versioned
+:class:`repro.serve.stats.ServiceStats` (dict-key access is a deprecated
+shim over ``as_dict()``).
+
+SLO tiers
+---------
+Each request carries a tier (``realtime`` / ``standard`` / ``best_effort``)
+whose SLO comes from ``ServiceConfig.tier_slos`` (falling back to the
+global ``slo_ms``).  A flush plans against the *binding* (minimum) SLO of
+the tiers it carries (:func:`repro.scheduling.dvfs.binding_slo`), and the
+energy ledger tracks attainment per tier.  ``flush(tier=...)`` flushes one
+tier only — the fleet scheduler (:mod:`repro.serve.fleet`) uses that to run
+realtime rounds before best-effort ones.
+
 Stream sessions (video workload)
 --------------------------------
 ``open_stream()`` adds stateful video sessions alongside one-shot requests:
@@ -23,10 +43,12 @@ each session owns a :class:`repro.stream.VideoDetector` (temporal tile-reuse
 cache), and ``submit_frame`` enqueues frames into the same queue.  A flush
 processes streams in per-session-ordered *rounds* sharded across pods like
 any other work; within a round the changed-tile work items of concurrent
-sessions are funneled through the shared packed incremental engine (one
-compaction for every stream's changed windows), and sessions that need a
-full refresh (first frame, keyframe, over-budget change) are batched
-through ``Detector.detect_batch_raw``.  This is the content-dependent,
+sessions that share a *plan key* (their shape bucket, hence their compiled
+:class:`repro.plan.CascadePlan` family) are funneled through the shared
+packed incremental engine — one compaction for every co-keyed stream's
+changed windows — and sessions that need a full refresh (first frame,
+keyframe, over-budget change) are batched through
+``Detector.detect_batch_raw``.  This is the content-dependent,
 variable-size task stream the asymmetric-scheduling literature targets:
 mostly-static streams produce tiny work items, busy streams produce big
 ones, and the rate-weighted split keeps the pods balanced either way.
@@ -36,12 +58,13 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
 
 import repro.plan as planlib
-from repro.scheduling.dvfs import (GovernorDecision,
+from repro.scheduling.dvfs import (GovernorDecision, binding_slo,
                                    evaluate_operating_points,
                                    select_operating_points)
 from repro.scheduling.energy import (EnergyAccount, parked_point,
@@ -50,9 +73,19 @@ from repro.scheduling.hetero import (HeteroPodPlan, rate_weighted_split,
                                      replan_on_straggle, update_rates_ema)
 from repro.stream import (StreamConfig, StreamEngine, VideoDetector,
                           level_windows_from_raw)
+from .stats import (SCHEMA_VERSION, DecisionStats, EnergyPodStats,
+                    EnergyStats, PodStats, ServiceStats, StreamStats,
+                    TailStats)
 
-__all__ = ["PodSpec", "DetectionRequest", "FrameRequest", "StreamSession",
-           "DetectorService"]
+__all__ = ["PodSpec", "ServiceConfig", "Request", "DetectionRequest",
+           "FrameRequest", "StreamSession", "DetectorService", "SLO_TIERS",
+           "GOVERNORS"]
+
+#: SLO tiers in strict priority order: the fleet scheduler flushes
+#: ``realtime`` rounds first and degrades ``best_effort`` sessions first.
+SLO_TIERS = ("realtime", "standard", "best_effort")
+
+GOVERNORS = (None, "energy", "max", "little")
 
 
 @dataclass(frozen=True)
@@ -68,14 +101,91 @@ class PodSpec:
     cluster: str = "big"
 
 
+@dataclass(frozen=True)
+class ServiceConfig:
+    """Typed, validated construction surface of :class:`DetectorService`
+    (replaces the historical keyword sprawl; validated like
+    ``Detector._validate_config``).
+
+    ``tier_slos`` maps an SLO tier name to its latency SLO in ms; tiers not
+    listed fall back to the global ``slo_ms``, so an untier-ed service
+    behaves exactly as before."""
+    pods: tuple[PodSpec, ...] = (PodSpec("pod0", 1.0),)
+    max_batch: int = 8
+    batch_sizes: tuple[int, ...] = (1, 2, 4, 8)
+    max_delay_ms: float = 5.0
+    strategy: str = "packed"
+    replan_threshold: float = 0.25
+    rate_ema: float = 0.5
+    stream_config: StreamConfig = StreamConfig()
+    # ---- energy/DVFS governor (paper §7.4 at serving scale).
+    # "energy": pick per-pod operating points + placement each flush to
+    #   meet the latency SLO at minimum modeled energy;
+    # "max"/"little": the static extremes (always top frequency on all
+    #   pods / LITTLE pods only), kept as governed policies so their
+    #   modeled energy is accounted identically and comparable.
+    governor: str | None = None
+    slo_ms: float = 50.0
+    wake_j: float = 0.02   # per-flush pod activation cost (J): what tips
+    #                        tiny (cached-stream) flushes toward
+    #                        LITTLE-only placement
+    tier_slos: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        pods = tuple(self.pods)
+        object.__setattr__(self, "pods", pods)
+        if not pods or any(p.speed <= 0 for p in pods):
+            raise ValueError(f"pods must be non-empty with positive speeds, "
+                             f"got {pods!r}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        sizes = tuple(sorted(set(int(b) for b in self.batch_sizes)))
+        if not sizes or sizes[0] < 1:
+            raise ValueError(f"batch_sizes must be positive ints, got "
+                             f"{self.batch_sizes!r}")
+        object.__setattr__(self, "batch_sizes", sizes)
+        if self.strategy not in ("packed", "vmap"):
+            raise ValueError(f"strategy must be 'packed' or 'vmap', got "
+                             f"{self.strategy!r}")
+        if not 0.0 <= self.rate_ema <= 1.0:
+            raise ValueError(f"rate_ema must be in [0, 1], got "
+                             f"{self.rate_ema}")
+        if self.governor not in GOVERNORS:
+            raise ValueError(f"governor must be one of {GOVERNORS}, "
+                             f"got {self.governor!r}")
+        if self.slo_ms <= 0 or self.wake_j < 0:
+            raise ValueError(f"need slo_ms > 0 and wake_j >= 0, got "
+                             f"slo_ms={self.slo_ms}, wake_j={self.wake_j}")
+        bad = set(self.tier_slos) - set(SLO_TIERS)
+        if bad:
+            raise ValueError(f"unknown SLO tiers {sorted(bad)}; "
+                             f"tiers are {SLO_TIERS}")
+        if any(v <= 0 for v in self.tier_slos.values()):
+            raise ValueError(f"tier SLOs must be positive, got "
+                             f"{self.tier_slos!r}")
+        object.__setattr__(self, "tier_slos", dict(self.tier_slos))
+
+    def tier_slo_ms(self, tier: str) -> float:
+        """The SLO (ms) of one tier; unlisted tiers use the global
+        ``slo_ms``."""
+        return self.tier_slos.get(tier, self.slo_ms)
+
+
 @dataclass
-class DetectionRequest:
-    """One queued image + its completion state."""
+class Request:
+    """One queued work item (one-shot image or stream frame) + its
+    completion state.  ``session`` is None for one-shot requests; stream
+    frames carry their :class:`StreamSession` (there is ONE completion and
+    sharding path — nothing downstream switches on the request's class)."""
     req_id: int
-    image: np.ndarray
+    image: np.ndarray | None = None
+    tier: str = "standard"
+    session: "StreamSession | None" = None
     done: threading.Event = field(default_factory=threading.Event)
     rects: np.ndarray | None = None
+    stats: object | None = None          # repro.stream.FrameStats (frames)
     error: Exception | None = None
+    dropped: bool = False                # shed by the fleet under overload
     t_submit: float = 0.0
     t_done: float = 0.0
 
@@ -92,28 +202,17 @@ class DetectionRequest:
 
 
 @dataclass
-class FrameRequest:
-    """One queued video frame of a stream session."""
-    req_id: int
-    session: "StreamSession"
-    frame: np.ndarray
-    done: threading.Event = field(default_factory=threading.Event)
-    rects: np.ndarray | None = None
-    stats: object | None = None          # repro.stream.FrameStats
-    error: Exception | None = None
-    t_submit: float = 0.0
-    t_done: float = 0.0
+class DetectionRequest(Request):
+    """One queued one-shot image (a :class:`Request` with no session)."""
 
-    def result(self, timeout: float | None = None) -> np.ndarray:
-        if not self.done.wait(timeout):
-            raise TimeoutError(f"frame request {self.req_id} not finished")
-        if self.error is not None:
-            raise self.error
-        return self.rects
+
+@dataclass
+class FrameRequest(Request):
+    """One queued video frame of a stream session."""
 
     @property
-    def latency_s(self) -> float:
-        return self.t_done - self.t_submit
+    def frame(self) -> np.ndarray | None:   # legacy alias for ``image``
+        return self.image
 
 
 class StreamSession:
@@ -121,9 +220,10 @@ class StreamSession:
     one :class:`repro.stream.VideoDetector` (opened via ``open_stream``)."""
 
     def __init__(self, service: "DetectorService", stream_id: int,
-                 config: StreamConfig):
+                 config: StreamConfig, tier: str = "standard"):
         self.service = service
         self.stream_id = stream_id
+        self.tier = tier
         self.video = VideoDetector(service.detector, config,
                                    engine=service.stream_engine)
         self.closed = False
@@ -133,8 +233,17 @@ class StreamSession:
         # stream weighs — and is budgeted by the governor — as the tiny
         # work item it really is, not as a full per-frame detect.
         self.work_frac = 1.0
+        self.frames_done = 0
 
-    def submit_frame(self, frame) -> FrameRequest:
+    @property
+    def plan_key(self) -> tuple[int, int] | None:
+        """The session's co-batching key: its shape bucket, i.e. the prefix
+        of every compiled ``CascadePlan.key`` its frames execute.  Sessions
+        sharing it share one compaction per round (None until the first
+        frame binds the bucket)."""
+        return self.video.bucket_hw
+
+    def submit_frame(self, frame) -> Request:
         if self.closed:
             raise RuntimeError(f"stream {self.stream_id} is closed")
         return self.service._submit_frame(self, frame)
@@ -158,42 +267,39 @@ class DetectorService:
     fires when ``max_batch`` requests are queued or ``max_delay_ms`` passed.
     """
 
-    GOVERNORS = (None, "energy", "max", "little")
+    GOVERNORS = GOVERNORS
 
-    def __init__(self, detector, pods: tuple[PodSpec, ...] | None = None,
-                 max_batch: int = 8, batch_sizes: tuple[int, ...] = (1, 2, 4, 8),
-                 max_delay_ms: float = 5.0, strategy: str = "packed",
-                 replan_threshold: float = 0.25, rate_ema: float = 0.5,
-                 stream_config: StreamConfig = StreamConfig(),
-                 governor: str | None = None, slo_ms: float = 50.0,
-                 wake_j: float = 0.02):
+    def __init__(self, detector, config: ServiceConfig | None = None,
+                 **legacy_kwargs):
+        if config is not None and legacy_kwargs:
+            raise TypeError("pass a ServiceConfig or legacy keywords, "
+                            f"not both (got {sorted(legacy_kwargs)})")
+        if config is None:
+            if legacy_kwargs:
+                warnings.warn(
+                    "DetectorService(detector, pods=..., ...) keyword "
+                    "construction is deprecated; pass "
+                    "DetectorService(detector, ServiceConfig(...))",
+                    DeprecationWarning, stacklevel=2)
+            config = ServiceConfig(**legacy_kwargs)
         self.detector = detector
-        self.pods = tuple(pods) if pods else (PodSpec("pod0", 1.0),)
-        self.max_batch = max_batch
-        self.batch_sizes = tuple(sorted(set(batch_sizes)))
-        self.max_delay_ms = max_delay_ms
-        self.strategy = strategy
-        self.replan_threshold = replan_threshold
-        self.rate_ema = rate_ema
-        self.stream_config = stream_config
-        # ---- energy/DVFS governor (paper §7.4 at serving scale).
-        # "energy": pick per-pod operating points + placement each flush to
-        #   meet the latency SLO at minimum modeled energy;
-        # "max"/"little": the static extremes (always top frequency on all
-        #   pods / LITTLE pods only), kept as governed policies so their
-        #   modeled energy is accounted identically and comparable.
-        if governor not in self.GOVERNORS:
-            raise ValueError(f"governor must be one of {self.GOVERNORS}, "
-                             f"got {governor!r}")
-        self.governor = governor
-        self.slo_ms = slo_ms
-        self.wake_j = wake_j     # per-flush pod activation cost (J): what
-        #                          tips tiny (cached-stream) flushes toward
-        #                          LITTLE-only placement
+        self.config = config
+        # convenience aliases (read-only views of the config)
+        self.pods = config.pods
+        self.max_batch = config.max_batch
+        self.batch_sizes = config.batch_sizes
+        self.max_delay_ms = config.max_delay_ms
+        self.strategy = config.strategy
+        self.replan_threshold = config.replan_threshold
+        self.rate_ema = config.rate_ema
+        self.stream_config = config.stream_config
+        self.governor = config.governor
+        self.slo_ms = config.slo_ms
+        self.wake_j = config.wake_j
         self._pod_ladders = tuple(pod_operating_points(p.cluster)
                                   for p in self.pods)
         self._energy_acct = (EnergyAccount(len(self.pods))
-                             if governor else None)
+                             if config.governor else None)
         self._last_decision: GovernorDecision | None = None
         self._stream_engine: StreamEngine | None = None
         self._streams: dict[int, StreamSession] = {}
@@ -204,10 +310,11 @@ class DetectorService:
         self._windows_total = 0
         self._levels_active = 0
         self._levels_total = 0
+        self._fleet = None                   # set by FleetScheduler.attach
 
         self._lock = threading.Lock()        # queue + accounting state
         self._flush_lock = threading.Lock()  # serializes whole flushes
-        self._queue: list[DetectionRequest | FrameRequest] = []
+        self._queue: list[Request] = []
         self._next_id = 0
         # nominal relative speeds until the first real observation (or
         # warmup) rescales them into absolute window-units/s — mixing the
@@ -227,15 +334,21 @@ class DetectorService:
         self._tail_chosen: list[tuple[int, str]] = []  # set by warmup()
 
     # ------------------------------------------------------------- intake
-    def submit(self, image) -> DetectionRequest:
+    def submit(self, image, tier: str = "standard") -> Request:
+        self._check_tier(tier)
         req = DetectionRequest(req_id=self._next_id_inc(),
                                image=np.asarray(image, np.float32),
-                               t_submit=time.perf_counter())
+                               tier=tier, t_submit=time.perf_counter())
         with self._lock:
             if self._t0 is None:
                 self._t0 = req.t_submit
             self._queue.append(req)
         return req
+
+    @staticmethod
+    def _check_tier(tier: str) -> None:
+        if tier not in SLO_TIERS:
+            raise ValueError(f"tier must be one of {SLO_TIERS}, got {tier!r}")
 
     def _next_id_inc(self) -> int:
         with self._lock:
@@ -260,7 +373,8 @@ class DetectorService:
                     self.detector, self.stream_config.max_changed_frac)
             return self._stream_engine
 
-    def open_stream(self, config: StreamConfig | None = None) -> StreamSession:
+    def open_stream(self, config: StreamConfig | None = None,
+                    tier: str = "standard") -> StreamSession:
         """Open a video stream session.  Open streams *after* ``warmup()``
         — warmup swaps in a calibrated detector, and sessions bind the
         detector (and shared stream engine) at open time.
@@ -268,11 +382,13 @@ class DetectorService:
         ``config`` tunes the session's tile/threshold/keyframe policy; the
         incremental *budget* (``max_changed_frac``) is a property of the
         shared engine and always comes from the service-level
-        ``stream_config`` (a per-session value here is ignored)."""
+        ``stream_config`` (a per-session value here is ignored).  ``tier``
+        sets the session's SLO class (every frame inherits it)."""
+        self._check_tier(tier)
         with self._lock:
             sid = self._next_stream_id
             self._next_stream_id += 1
-        sess = StreamSession(self, sid, config or self.stream_config)
+        sess = StreamSession(self, sid, config or self.stream_config, tier)
         with self._lock:
             self._streams[sid] = sess
         return sess
@@ -281,10 +397,10 @@ class DetectorService:
         with self._lock:
             self._streams.pop(sess.stream_id, None)
 
-    def _submit_frame(self, sess: StreamSession, frame) -> FrameRequest:
+    def _submit_frame(self, sess: StreamSession, frame) -> Request:
         req = FrameRequest(req_id=self._next_id_inc(), session=sess,
-                           frame=np.asarray(frame, np.float32),
-                           t_submit=time.perf_counter())
+                           image=np.asarray(frame, np.float32),
+                           tier=sess.tier, t_submit=time.perf_counter())
         with self._lock:
             if self._t0 is None:
                 self._t0 = req.t_submit
@@ -323,28 +439,38 @@ class DetectorService:
                                  for seg in bplan.tail_segments]
 
     # -------------------------------------------------------------- flush
-    def flush(self) -> int:
+    def flush(self, tier: str | None = None) -> int:
         """Process every queued request; returns the number completed.
-        Safe to call from the background flusher and callers concurrently:
-        flushes serialize, and a request that fails (even with an
-        unexpected exception) completes with ``error`` set rather than
-        dropping silently or killing the flusher thread.
+        ``tier`` restricts the flush to one SLO tier (other requests stay
+        queued) — the fleet scheduler's tier-ordered rounds.  Safe to call
+        from the background flusher and callers concurrently: flushes
+        serialize, and a request that fails (even with an unexpected
+        exception) completes with ``error`` set rather than dropping
+        silently or killing the flusher thread.
 
         One-shot images shard across pods directly.  Stream frames are
         processed in *rounds* of one frame per session (preserving each
         session's frame order), each round sharded across pods at session
-        granularity."""
+        granularity.  The flush plans against the binding (minimum) SLO of
+        the tiers it carries."""
+        if tier is not None:
+            self._check_tier(tier)
         with self._flush_lock:
             with self._lock:
-                batch, self._queue = self._queue, []
+                if tier is None:
+                    batch, self._queue = self._queue, []
+                else:
+                    batch = [r for r in self._queue if r.tier == tier]
+                    self._queue = [r for r in self._queue if r.tier != tier]
             if not batch:
                 return 0
-            images = [r for r in batch if isinstance(r, DetectionRequest)]
-            frames = [r for r in batch if isinstance(r, FrameRequest)]
+            images = [r for r in batch if r.session is None]
+            frames = [r for r in batch if r.session is not None]
             if images:
                 self._shard_across_pods(
                     images, self._run_shard,
-                    [self._work_units(r.image.shape) for r in images])
+                    [self._request_units(r) for r in images],
+                    tiers=self._tiers_present(images))
             while frames:
                 round_, rest, seen = [], [], set()
                 for fr in frames:
@@ -356,8 +482,16 @@ class DetectorService:
                 frames = rest
                 self._shard_across_pods(
                     round_, self._run_stream_shard,
-                    [self._frame_work_units(fr) for fr in round_])
+                    [self._request_units(fr) for fr in round_],
+                    tiers=self._tiers_present(round_))
             return len(batch)
+
+    def _tiers_present(self, items: list[Request]) -> dict[str, float]:
+        """tier -> SLO (s) for the tiers carried by this flush (the
+        governor plans against their binding minimum; the ledger tracks
+        attainment per tier)."""
+        return {t: self.config.tier_slo_ms(t) / 1e3
+                for t in {r.tier for r in items}}
 
     def _work_units(self, shape) -> int:
         """Plan-derived cost weight of one work item: lanes × stage depth
@@ -371,30 +505,39 @@ class DetectorService:
         hp, wp = det._bucket_hw(int(shape[0]), int(shape[1]))
         return max(det.batch_plan(hp, wp).work_units, 1)
 
-    def _frame_work_units(self, fr: FrameRequest) -> int:
-        """Predicted cost of one stream frame: the bucket plan's work units
-        scaled by the session's observed recompute fraction (EMA over its
-        ``FrameStats``).  Idle/cached sessions therefore weigh a small
-        fraction of a full detect — which is what lets the governor degrade
-        them to LITTLE placements — while sessions in full-refresh churn
-        weigh ~1.0 and trigger race-to-idle instead."""
-        full = self._work_units(fr.frame.shape)
-        return max(int(full * min(fr.session.work_frac, 1.0)), 1)
+    def _request_units(self, r: Request) -> int:
+        """Predicted cost of one request.  One-shot images cost their full
+        bucket plan; a stream frame costs the plan scaled by its session's
+        observed recompute fraction (EMA over its ``FrameStats``) —
+        idle/cached sessions therefore weigh a small fraction of a full
+        detect, which is what lets the governor degrade them to LITTLE
+        placements, while sessions in full-refresh churn weigh ~1.0 and
+        trigger race-to-idle instead."""
+        full = self._work_units(r.image.shape)
+        if r.session is None:
+            return full
+        return max(int(full * min(r.session.work_frac, 1.0)), 1)
 
     def _shard_across_pods(self, items: list, run_fn,
-                           weights: list[int]) -> None:
+                           weights: list[int],
+                           tiers: dict[str, float] | None = None) -> None:
         """Rate-weighted pod loop shared by one-shot and stream work.
 
-        Shares are planned in *plan work units* (``_work_units`` per item),
-        then contiguous runs of items are cut at the unit boundaries, so
-        pods of unequal speed get balanced work even when a flush mixes
-        image sizes.  Observed rates are tracked in units/s at each pod's
-        *nominal* (top-frequency) operating point; the governor — when one
-        is active — scales them by its chosen per-pod DVFS points, parks
-        pods by giving them rate 0, and the modeled energy of the flush is
-        charged to the :class:`~repro.scheduling.energy.EnergyAccount`."""
+        Shares are planned in *plan work units* (``_request_units`` per
+        item), then contiguous runs of items are cut at the unit
+        boundaries, so pods of unequal speed get balanced work even when a
+        flush mixes image sizes.  Observed rates are tracked in units/s at
+        each pod's *nominal* (top-frequency) operating point; the governor
+        — when one is active — scales them by its chosen per-pod DVFS
+        points, parks pods by giving them rate 0, and the modeled energy of
+        the flush is charged to the
+        :class:`~repro.scheduling.energy.EnergyAccount`.  ``tiers`` maps
+        the SLO tiers present to their deadlines (s): the governor plans
+        against the binding minimum."""
         total_units = int(sum(weights))
-        decision = self._decide(total_units)
+        slo_s = (binding_slo(tiers.values()) if tiers
+                 else self.slo_ms / 1e3)
+        decision = self._decide(total_units, slo_s)
         plan = self._plan(total_units,
                           decision.rates if decision is not None else None)
         shards: list[list] = []
@@ -443,9 +586,9 @@ class DetectorService:
         if self._energy_acct is not None and decision is not None:
             with self._lock:
                 self._energy_acct.charge_shard(decision.ops, busy_s,
-                                               unit_sums,
-                                               slo_s=self.slo_ms / 1e3,
-                                               wake_J=self.wake_j)
+                                               unit_sums, slo_s=slo_s,
+                                               wake_J=self.wake_j,
+                                               tier_slos=tiers)
                 self._last_decision = decision
         self._update_rates(observed)
 
@@ -458,11 +601,15 @@ class DetectorService:
                 n += self._stream_engine.program_builds
         return n
 
-    def _decide(self, total_units: int) -> GovernorDecision | None:
+    def _decide(self, total_units: int,
+                slo_s: float | None = None) -> GovernorDecision | None:
         """Pick this flush's per-pod operating points under the configured
-        governor (None = ungoverned: every pod at nominal speed)."""
+        governor (None = ungoverned: every pod at nominal speed).  ``slo_s``
+        is the flush's binding deadline (defaults to the global SLO)."""
         if self.governor is None:
             return None
+        if slo_s is None:
+            slo_s = self.slo_ms / 1e3
         with self._lock:
             rates = self._rates.copy()
             in_units = self._rates_in_units
@@ -485,9 +632,9 @@ class DetectorService:
         else:
             return select_operating_points(total_units, rates,
                                            self._pod_ladders,
-                                           self.slo_ms / 1e3, self.wake_j)
+                                           slo_s, self.wake_j)
         d = evaluate_operating_points(total_units, rates, ops,
-                                      self.slo_ms / 1e3, self.wake_j)
+                                      slo_s, self.wake_j)
         if d is None:                    # all rates zero: nominal split
             return None
         return d
@@ -541,7 +688,7 @@ class DetectorService:
                 self._n_replans += 1
                 self._last_plan = new
 
-    def _run_shard(self, shard: list[DetectionRequest]) -> None:
+    def _run_shard(self, shard: list[Request]) -> None:
         for chunk in self._chunks(shard):
             images = [r.image for r in chunk]
             try:
@@ -560,21 +707,23 @@ class DetectorService:
             for r, out in zip(chunk, rects):
                 self._complete(r, out)
 
-    def _complete(self, req, out, stats=None) -> None:
-        """Finish one request/frame with rects or an Exception."""
+    def _complete(self, req: Request, out, stats=None) -> None:
+        """Finish one request with rects or an Exception — the single
+        completion path for one-shot images and stream frames alike (the
+        only difference is the session-EMA update frames feed back)."""
         req.t_done = time.perf_counter()
         if isinstance(out, Exception):
             req.error = out
         else:
             req.rects = out
-        if isinstance(req, FrameRequest):
-            req.stats = stats
+        req.stats = stats
         with self._lock:
             self._t_last = req.t_done
             self._latencies.append(req.latency_s)
             self._n_done += 1
-            if isinstance(req, FrameRequest):
+            if req.session is not None:
                 self._frames_done += 1
+                req.session.frames_done += 1
                 if stats is not None:
                     self._frame_modes[stats.mode] += 1
                     self._windows_total += stats.windows_total
@@ -589,20 +738,21 @@ class DetectorService:
         req.done.set()
 
     # ---------------------------------------------------------- stream run
-    def _run_stream_shard(self, shard: list[FrameRequest]) -> None:
+    def _run_stream_shard(self, shard: list[Request]) -> None:
         """Process one round of frames (<= 1 per session).
 
         Plans every session's frame, then batches the work *across*
-        sessions: incremental frames share the packed engine's compaction
-        (grouped by shape bucket, chopped to ``batch_sizes``), and frames
-        needing a full refresh go through ``detect_batch_raw`` together.
-        Any failure or overflow degrades per frame, never the whole round.
+        sessions: incremental frames of sessions sharing a plan key go
+        through one shared-compaction call on the packed engine (grouped by
+        the key, chopped to ``batch_sizes``), and frames needing a full
+        refresh go through ``detect_batch_raw`` together.  Any failure or
+        overflow degrades per frame, never the whole round.
         """
-        incr: list[tuple[FrameRequest, np.ndarray, object]] = []
-        full: list[tuple[FrameRequest, np.ndarray]] = []
+        incr: list[tuple[Request, np.ndarray, object]] = []
+        full: list[tuple[Request, np.ndarray]] = []
         for fr in shard:
             try:
-                frame, plan = fr.session.video.plan_frame(fr.frame)
+                frame, plan = fr.session.video.plan_frame(fr.image)
             except Exception as e:             # noqa: BLE001
                 self._complete(fr, e)
                 continue
@@ -614,11 +764,11 @@ class DetectorService:
             else:
                 incr.append((fr, frame, plan))
 
-        # ---- changed-tile work items, all sessions -> shared compaction
+        # ---- changed-tile work items: all sessions sharing a plan key
+        # funnel through ONE compaction per chunk (cross-tenant batching)
         buckets: dict[tuple[int, int], list] = {}
         for item in incr:
-            buckets.setdefault(item[0].session.video.bucket_hw,
-                               []).append(item)
+            buckets.setdefault(item[0].session.plan_key, []).append(item)
         for (hp, wp), items in buckets.items():
             for chunk in self._chunks(items):
                 frames = [frame for (_fr, frame, _plan) in chunk]
@@ -647,13 +797,13 @@ class DetectorService:
         # ---- keyframes / refreshes, batched through the raw batch path
         buckets = {}
         for fr, frame in full:
-            buckets.setdefault(fr.session.video.bucket_hw,
+            buckets.setdefault(fr.session.plan_key,
                                []).append((fr, frame))
         for _hw, items in buckets.items():
             for chunk in self._chunks(items):
                 self._run_full_chunk(chunk)
 
-    def _run_full_chunk(self, chunk: list[tuple[FrameRequest, np.ndarray]]
+    def _run_full_chunk(self, chunk: list[tuple[Request, np.ndarray]]
                         ) -> None:
         levels = None
         if len(chunk) > 1:
@@ -719,7 +869,10 @@ class DetectorService:
         self.flush()
 
     # -------------------------------------------------------------- stats
-    def stats(self) -> dict:
+    def stats(self) -> ServiceStats:
+        """Typed, versioned service statistics (:class:`ServiceStats`).
+        Dict-key access (``stats()["energy"]``) still works through the
+        deprecation shim over ``as_dict()``."""
         with self._lock:
             lat = np.asarray(self._latencies) * 1e3
             elapsed = (max(self._t_last - self._t0, 1e-9)
@@ -730,72 +883,83 @@ class DetectorService:
             rates = self._rates.copy()
             n_replans = self._n_replans
             last_plan = self._last_plan
-            stream = {
-                "sessions": len(self._streams),
-                "frames_done": self._frames_done,
-                "frame_modes": dict(self._frame_modes),
-                "window_skip_frac": (self._windows_skipped
-                                     / max(self._windows_total, 1)),
-                "level_skip_frac": (1.0 - self._levels_active
-                                    / max(self._levels_total, 1)),
-            }
+            stream = StreamStats(
+                sessions=len(self._streams),
+                frames_done=self._frames_done,
+                frame_modes=dict(self._frame_modes),
+                window_skip_frac=(self._windows_skipped
+                                  / max(self._windows_total, 1)),
+                level_skip_frac=(1.0 - self._levels_active
+                                 / max(self._levels_total, 1)),
+            )
             energy = self._energy_stats_locked(n_done)
         total_sim = pod_sim.sum()
-        pods = [{
-            "name": p.name, "speed": p.speed, "cluster": p.cluster,
-            "rate": float(rates[i]),
-            "images": int(pod_shares[i]),
-            "sim_time_s": float(pod_sim[i]),
-        } for i, p in enumerate(self.pods)]
+        pods = tuple(
+            PodStats(name=p.name, speed=p.speed, cluster=p.cluster,
+                     rate=float(rates[i]), images=int(pod_shares[i]),
+                     sim_time_s=float(pod_sim[i]))
+            for i, p in enumerate(self.pods))
         cfg = self.detector.config
-        return {
-            "n_done": n_done,
-            "imgs_per_s": n_done / elapsed,
-            "tail": {                     # packed-tail policy in force
-                "backend": cfg.tail_backend,
-                "rungs": [list(r) for r in cfg.tail_rungs],
-                # (capacity, backend) the plan layer chose per tail segment
-                # of the warmed probe bucket (set by warmup())
-                "chosen": [list(c) for c in self._tail_chosen],
-            },
-            "latency_ms_p50": float(np.percentile(lat, 50)) if len(lat) else 0.0,
-            "latency_ms_p95": float(np.percentile(lat, 95)) if len(lat) else 0.0,
-            "latency_ms_p99": float(np.percentile(lat, 99)) if len(lat) else 0.0,
-            "pods": pods,
-            "makespan_imbalance": (float(pod_sim.max() /
-                                         (total_sim / len(self.pods)))
-                                   if total_sim > 0 else 1.0),
-            "replans": n_replans,
-            "last_plan": (dict(zip(last_plan.pod_names, last_plan.shares))
-                          if last_plan else {}),
-            "stream": stream,
-            "energy": energy,
-        }
+        fleet = self._fleet.fleet_stats() if self._fleet is not None else None
+        return ServiceStats(
+            schema_version=SCHEMA_VERSION,
+            n_done=n_done,
+            imgs_per_s=n_done / elapsed,
+            tail=TailStats(backend=cfg.tail_backend,
+                           rungs=tuple(tuple(r) for r in cfg.tail_rungs),
+                           # (capacity, backend) the plan layer chose per
+                           # tail segment of the warmed probe bucket
+                           chosen=tuple(tuple(c)
+                                        for c in self._tail_chosen)),
+            latency_ms_p50=float(np.percentile(lat, 50)) if len(lat) else 0.0,
+            latency_ms_p95=float(np.percentile(lat, 95)) if len(lat) else 0.0,
+            latency_ms_p99=float(np.percentile(lat, 99)) if len(lat) else 0.0,
+            pods=pods,
+            makespan_imbalance=(float(pod_sim.max()
+                                      / (total_sim / len(self.pods)))
+                                if total_sim > 0 else 1.0),
+            replans=n_replans,
+            last_plan=(dict(zip(last_plan.pod_names, last_plan.shares))
+                       if last_plan else {}),
+            stream=stream,
+            energy=energy,
+            fleet=fleet,
+        )
 
-    def _energy_stats_locked(self, n_done: int) -> dict:
-        """The ``stats()["energy"]`` section (caller holds ``_lock``):
-        modeled joules, J/detection, SLO compliance, and the per-pod
-        operating points the governor chose from plan work units."""
+    def _energy_stats_locked(self, n_done: int) -> EnergyStats | None:
+        """The ``stats().energy`` section (caller holds ``_lock``):
+        modeled joules, J/detection, per-tier SLO compliance, and the
+        per-pod operating points the governor chose from plan work units.
+        None when the service runs ungoverned."""
         if self._energy_acct is None:
-            return {"governor": None}
+            return None
         acct = self._energy_acct
-        out = {"governor": self.governor, "slo_ms": self.slo_ms}
-        out.update(acct.summary())
-        out["J_per_detection"] = acct.total_J / max(n_done, 1)
-        out["sim_makespan_p95_ms"] = (
-            float(np.percentile(np.asarray(acct.makespans) * 1e3, 95))
-            if acct.makespans else 0.0)
-        out["pods"] = [{
-            "name": p.name, "cluster": p.cluster, "op": acct.op_names[i],
-            "active_J": acct.active_J[i], "idle_J": acct.idle_J[i],
-            "busy_s": acct.busy_s[i], "work_units": acct.work_units[i],
-        } for i, p in enumerate(self.pods)]
         d = self._last_decision
-        out["last_decision"] = ({
-            "ops": [op.name for op in d.ops],
-            "work_units": d.work_units,
-            "predicted_makespan_ms": d.makespan * 1e3,
-            "predicted_energy_J": d.energy,
-            "feasible": d.feasible,
-        } if d is not None else {})
-        return out
+        return EnergyStats(
+            governor=self.governor,
+            slo_ms=self.slo_ms,
+            total_J=acct.total_J,
+            active_J=sum(acct.active_J),
+            idle_J=sum(acct.idle_J),
+            flushes=acct.flushes,
+            slo_met_frac=(acct.slo_met / acct.flushes
+                          if acct.flushes else 1.0),
+            slo_met_by_tier=acct.slo_met_by_tier(),
+            J_per_detection=acct.total_J / max(n_done, 1),
+            sim_makespan_p95_ms=(
+                float(np.percentile(np.asarray(acct.makespans) * 1e3, 95))
+                if acct.makespans else 0.0),
+            pods=tuple(
+                EnergyPodStats(name=p.name, cluster=p.cluster,
+                               op=acct.op_names[i],
+                               active_J=acct.active_J[i],
+                               idle_J=acct.idle_J[i], busy_s=acct.busy_s[i],
+                               work_units=acct.work_units[i])
+                for i, p in enumerate(self.pods)),
+            last_decision=(DecisionStats(
+                ops=tuple(op.name for op in d.ops),
+                work_units=d.work_units,
+                predicted_makespan_ms=d.makespan * 1e3,
+                predicted_energy_J=d.energy,
+                feasible=d.feasible) if d is not None else None),
+        )

@@ -79,6 +79,34 @@ class StreamConfig(NamedTuple):
     keyframe_interval: int = 64    # full re-detect cadence; 0 = never
     max_changed_frac: float = 0.5  # incremental budget as a window fraction
     full_refresh_frac: float = 0.5  # changed-window frac forcing full detect
+    # ---- graceful-degradation knobs (fleet serving under overload).
+    # degraded(level) stretches the keyframe cadence and raises the change
+    # threshold; it never touches tile/halo, so the conservative
+    # changed-tile -> window mapping (every window whose receptive field
+    # overlaps a changed tile is recomputed) is preserved at every level.
+    degrade_keyframe_mult: float = 2.0   # keyframe_interval x this / level
+    degrade_threshold_add: float = 0.0   # change-score added per level (0 =
+    #                                      keyframe stretch only, keeps
+    #                                      threshold-0 streams bit-exact)
+    max_degrade_level: int = 3
+
+    def degraded(self, level: int) -> "StreamConfig":
+        """The stretched config at degradation ``level`` (0 = this config).
+
+        Level is clamped to ``max_degrade_level``.  Each level multiplies
+        the keyframe interval by ``degrade_keyframe_mult`` (0 = never stays
+        never) and adds ``degrade_threshold_add`` to the change threshold;
+        with the default additive step of 0, a threshold-0 (exact) stream
+        stays bit-identical to per-frame detection at every level — only
+        its full-refresh cadence stretches."""
+        level = max(0, min(int(level), self.max_degrade_level))
+        if level == 0:
+            return self
+        kf = self.keyframe_interval
+        if kf > 0:
+            kf = max(int(round(kf * self.degrade_keyframe_mult ** level)), kf)
+        thr = self.threshold + self.degrade_threshold_add * level
+        return self._replace(keyframe_interval=kf, threshold=thr)
 
 
 class FrameStats(NamedTuple):
@@ -282,6 +310,20 @@ class VideoDetector:
     def commit_cached(self, frame: np.ndarray,
                       plan: FramePlan) -> tuple[np.ndarray, FrameStats]:
         return self._finish(frame, "cached", plan.tiles_changed, 0, 0)
+
+    def reconfigure(self, config: StreamConfig) -> None:
+        """Swap the stream's threshold/keyframe policy mid-stream without
+        dropping temporal state — the serving layer's degradation path
+        (``config.degraded(level)``).  ``tile`` and ``halo`` must not
+        change: the cached bitmaps stay valid under any threshold/cadence,
+        but the change-detection granularity is part of the stream's
+        conservative-mapping contract and is fixed at open time."""
+        if (config.tile, config.halo) != (self.config.tile, self.config.halo):
+            raise ValueError(
+                f"tile/halo are fixed per stream: "
+                f"{(self.config.tile, self.config.halo)} -> "
+                f"{(config.tile, config.halo)}; open a new stream instead")
+        self.config = config
 
     # -------------------------------------------------------------- public
     def process(self, frame) -> tuple[np.ndarray, FrameStats]:

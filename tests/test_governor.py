@@ -2,7 +2,7 @@
 model, per-flush operating-point selection (SLO-feasible minimum modeled
 energy), the two policy archetypes the paper motivates (race-to-idle for
 bursts, degrade-to-LITTLE for trickles), and the per-pod energy ledger the
-service exposes through ``stats()["energy"]``."""
+service exposes through ``stats().energy``."""
 
 import numpy as np
 import pytest
@@ -140,7 +140,7 @@ def test_energy_account_arithmetic():
 def test_service_reports_energy_stats():
     from repro.core import Detector, EngineConfig, paper_shaped_cascade
     from repro.core.training.data import render_scene
-    from repro.serve import DetectorService, PodSpec
+    from repro.serve import DetectorService, PodSpec, ServiceConfig
 
     det = Detector(paper_shaped_cascade(0, stage_sizes=[3, 4, 5, 6]),
                    EngineConfig(mode="wave", pad_multiple=32, step=2,
@@ -150,33 +150,38 @@ def test_service_reports_energy_stats():
 
     off = DetectorService(det)
     off.detect_many(imgs)
-    assert off.stats()["energy"] == {"governor": None}
+    assert off.stats().energy is None
+    # deprecated dict-key access keeps the historical ungoverned stanza
+    with pytest.warns(DeprecationWarning):
+        assert off.stats()["energy"] == {"governor": None}
 
-    svc = DetectorService(det, pods=(PodSpec("big", 1.0, "big"),
-                                     PodSpec("little", 0.45, "LITTLE")),
-                          governor="energy", slo_ms=200.0)
+    svc = DetectorService(det, ServiceConfig(
+        pods=(PodSpec("big", 1.0, "big"), PodSpec("little", 0.45, "LITTLE")),
+        governor="energy", slo_ms=200.0))
     svc.seed_rates([400.0, 180.0])
     got = svc.detect_many(imgs)
     for im, rects in zip(imgs, got):
         assert np.array_equal(rects, det.detect(im))
-    en = svc.stats()["energy"]
-    assert en["governor"] == "energy"
-    assert en["total_J"] > 0
-    assert en["flushes"] >= 1
-    assert 0.0 <= en["slo_met_frac"] <= 1.0
-    assert en["J_per_detection"] > 0
-    pods = en["pods"]
-    assert [p["cluster"] for p in pods] == ["big", "LITTLE"]
+    en = svc.stats().energy
+    assert en.governor == "energy"
+    assert en.total_J > 0
+    assert en.flushes >= 1
+    assert 0.0 <= en.slo_met_frac <= 1.0
+    assert en.J_per_detection > 0
+    pods = en.pods
+    assert [p.cluster for p in pods] == ["big", "LITTLE"]
     for p in pods:
-        assert p["op"] == "-" or "@" in p["op"] or p["op"] == "parked"
+        assert p.op == "-" or "@" in p.op or p.op == "parked"
     # the flush's decision came off plan work units at the seeded rates
-    d = en["last_decision"]
+    d = en.last_decision
     assert d is not None
-    assert d["work_units"] == sum(svc._work_units(im.shape) for im in imgs)
-    assert d["predicted_energy_J"] > 0
-    assert len(d["ops"]) == 2
+    assert d.work_units == sum(svc._work_units(im.shape) for im in imgs)
+    assert d.predicted_energy_J > 0
+    assert len(d.ops) == 2
 
     with pytest.raises(ValueError):
-        DetectorService(det, governor="bogus")
+        # legacy kwargs construction still validates through ServiceConfig
+        with pytest.warns(DeprecationWarning):
+            DetectorService(det, governor="bogus")
     with pytest.raises(ValueError):
         svc.seed_rates([1.0])

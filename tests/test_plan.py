@@ -284,10 +284,10 @@ def test_plan_work_units_weight_lanes_by_stage_depth():
 
 
 def test_service_weighted_sharding_completes_all_items():
-    from repro.serve import DetectorService, PodSpec
+    from repro.serve import DetectorService, PodSpec, ServiceConfig
     det = Detector(CASC, CFG._replace(pad_multiple=32))
-    svc = DetectorService(det, pods=(PodSpec("big", 1.0),
-                                     PodSpec("little", 0.25)))
+    svc = DetectorService(det, ServiceConfig(
+        pods=(PodSpec("big", 1.0), PodSpec("little", 0.25))))
     rng = np.random.default_rng(3)
     shapes = [(64, 64), (90, 100), (64, 64), (70, 70), (64, 64)]
     imgs = [render_scene(rng, h, w, n_faces=1)[0] for h, w in shapes]
@@ -295,5 +295,5 @@ def test_service_weighted_sharding_completes_all_items():
     for im, rects in zip(imgs, got):
         assert np.array_equal(rects, det.detect(im))
     st = svc.stats()
-    assert sum(p["images"] for p in st["pods"]) == len(imgs)
-    assert st["pods"][0]["images"] >= st["pods"][1]["images"]
+    assert sum(p.images for p in st.pods) == len(imgs)
+    assert st.pods[0].images >= st.pods[1].images

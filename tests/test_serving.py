@@ -10,7 +10,7 @@ import pytest
 from repro.core import Detector, EngineConfig, paper_shaped_cascade
 from repro.core.training.data import render_scene
 from repro.scheduling.hetero import rate_weighted_split, update_rates_ema
-from repro.serve import DetectorService, PodSpec
+from repro.serve import DetectorService, PodSpec, ServiceConfig
 
 CASC = paper_shaped_cascade(0, stage_sizes=[3, 4, 5, 6, 8])
 KW = dict(step=2, scale_factor=1.3, min_neighbors=2)
@@ -29,8 +29,8 @@ def images():
 
 
 def test_detect_many_matches_detect(detector, images):
-    svc = DetectorService(detector,
-                          pods=(PodSpec("big", 1.0), PodSpec("little", 0.4)))
+    svc = DetectorService(detector, ServiceConfig(
+        pods=(PodSpec("big", 1.0), PodSpec("little", 0.4))))
     got = svc.detect_many(images)
     for im, rects in zip(images, got):
         assert np.array_equal(rects, detector.detect(im))
@@ -50,7 +50,8 @@ def test_submit_flush_futures(detector, images):
 
 
 def test_chunking_bounded_batch_shapes(detector):
-    svc = DetectorService(detector, batch_sizes=(1, 2, 4), max_batch=4)
+    svc = DetectorService(detector,
+                          ServiceConfig(batch_sizes=(1, 2, 4), max_batch=4))
     shard = list(range(7))
     sizes = [len(c) for c in svc._chunks(shard)]
     assert sizes == [4, 2, 1]
@@ -58,17 +59,17 @@ def test_chunking_bounded_batch_shapes(detector):
 
 
 def test_pod_shares_and_stats(detector, images):
-    svc = DetectorService(detector,
-                          pods=(PodSpec("big", 1.0), PodSpec("little", 0.25)))
+    svc = DetectorService(detector, ServiceConfig(
+        pods=(PodSpec("big", 1.0), PodSpec("little", 0.25))))
     svc.detect_many(images)
     st = svc.stats()
-    assert st["n_done"] == len(images)
-    assert sum(p["images"] for p in st["pods"]) == len(images)
+    assert st.n_done == len(images)
+    assert sum(p.images for p in st.pods) == len(images)
     # rate-weighted: the big pod must get at least as much as the LITTLE one
-    big, little = st["pods"]
-    assert big["images"] >= little["images"]
-    assert st["latency_ms_p95"] >= st["latency_ms_p50"] >= 0
-    assert st["imgs_per_s"] > 0
+    big, little = st.pods
+    assert big.images >= little.images
+    assert st.latency_ms_p95 >= st.latency_ms_p50 >= 0
+    assert st.imgs_per_s > 0
 
 
 def test_warmup_calibrates_without_changing_results(detector, images):
@@ -98,7 +99,8 @@ def test_overflow_isolated_per_request(images):
 
 
 def test_background_thread_flushes(detector, images):
-    svc = DetectorService(detector, max_batch=2, max_delay_ms=10.0)
+    svc = DetectorService(detector,
+                          ServiceConfig(max_batch=2, max_delay_ms=10.0))
     svc.start()
     try:
         reqs = [svc.submit(im) for im in images[:2]]
@@ -106,7 +108,7 @@ def test_background_thread_flushes(detector, images):
             r.result(timeout=30.0)
     finally:
         svc.stop()
-    assert svc.stats()["n_done"] >= 2
+    assert svc.stats().n_done >= 2
 
 
 # ------------------------------------------------------------- scheduling
@@ -142,9 +144,8 @@ def test_first_flush_compile_wall_does_not_poison_rates(detector):
     """Regression: the first flush of a new batch shape pays jit
     trace/compile inside the measured wall.  That observation must be
     discarded — only warm walls may move the rate EMA."""
-    svc = DetectorService(detector, pods=(PodSpec("big", 1.0),
-                                          PodSpec("little", 0.5)),
-                          rate_ema=0.5)
+    svc = DetectorService(detector, ServiceConfig(
+        pods=(PodSpec("big", 1.0), PodSpec("little", 0.5)), rate_ema=0.5))
     items = list(range(8))
     weights = [10] * len(items)
 
@@ -170,13 +171,13 @@ def test_first_flush_compile_wall_does_not_poison_rates(detector):
 
 
 def test_service_replans_on_straggle(detector, images):
-    svc = DetectorService(detector,
-                          pods=(PodSpec("big", 1.0), PodSpec("little", 0.1)),
-                          rate_ema=1.0, replan_threshold=0.05)
+    svc = DetectorService(detector, ServiceConfig(
+        pods=(PodSpec("big", 1.0), PodSpec("little", 0.1)),
+        rate_ema=1.0, replan_threshold=0.05))
     for _ in range(3):
         svc.detect_many(images[:4])
     st = svc.stats()
     # measured rates diverge strongly from the 10:1 nominal guess at least
     # once, so the straggle replanner must have fired
-    assert st["replans"] >= 1
-    assert st["pods"][0]["rate"] != st["pods"][1]["rate"]
+    assert st.replans >= 1
+    assert st.pods[0].rate != st.pods[1].rate

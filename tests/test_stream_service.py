@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.core import Detector, EngineConfig, paper_shaped_cascade
-from repro.serve import DetectorService, FrameRequest, PodSpec
+from repro.serve import (DetectorService, FrameRequest, PodSpec,
+                         Request, ServiceConfig)
 from repro.stream import StreamConfig, make_video
 
 CASC = paper_shaped_cascade(0, stage_sizes=[3, 4, 5, 6, 8])
@@ -27,9 +28,9 @@ def videos():
 
 
 def test_concurrent_streams_match_detect(detector, videos):
-    svc = DetectorService(detector,
-                          pods=(PodSpec("big", 1.0), PodSpec("little", 0.4)),
-                          stream_config=SCFG)
+    svc = DetectorService(detector, ServiceConfig(
+        pods=(PodSpec("big", 1.0), PodSpec("little", 0.4)),
+        stream_config=SCFG))
     sessions = [svc.open_stream() for _ in videos]
     reqs = []
     for t in range(5):
@@ -37,21 +38,21 @@ def test_concurrent_streams_match_detect(detector, videos):
             reqs.append((vid[t][0], sess.submit_frame(vid[t][0])))
     svc.flush()
     for frame, r in reqs:
-        assert isinstance(r, FrameRequest)
+        assert isinstance(r, FrameRequest) and isinstance(r, Request)
         assert np.array_equal(r.result(), detector.detect(frame))
         assert r.stats is not None and r.latency_s >= 0
     st = svc.stats()
-    assert st["stream"]["sessions"] == 3
-    assert st["stream"]["frames_done"] == 15
-    modes = st["stream"]["frame_modes"]
+    assert st.stream.sessions == 3
+    assert st.stream.frames_done == 15
+    modes = st.stream.frame_modes
     assert modes["full"] >= 3                 # one keyframe per stream
     assert modes["incremental"] > 0           # batched changed-tile work
-    assert 0 < st["stream"]["window_skip_frac"] < 1
-    assert sum(p["images"] for p in st["pods"]) == 15
+    assert 0 < st.stream.window_skip_frac < 1
+    assert sum(p.images for p in st.pods) == 15
 
 
 def test_frames_processed_in_order(detector, videos):
-    svc = DetectorService(detector, stream_config=SCFG)
+    svc = DetectorService(detector, ServiceConfig(stream_config=SCFG))
     sess = svc.open_stream()
     reqs = [sess.submit_frame(f) for f, _gt in videos[0]]
     svc.flush()
@@ -60,7 +61,7 @@ def test_frames_processed_in_order(detector, videos):
 
 
 def test_detect_frames_convenience(detector, videos):
-    svc = DetectorService(detector, stream_config=SCFG)
+    svc = DetectorService(detector, ServiceConfig(stream_config=SCFG))
     sess = svc.open_stream()
     frames = [f for f, _gt in videos[1][:3]]
     got = sess.detect_frames(frames)
@@ -69,7 +70,7 @@ def test_detect_frames_convenience(detector, videos):
 
 
 def test_streams_and_oneshots_share_flush(detector, videos):
-    svc = DetectorService(detector, stream_config=SCFG)
+    svc = DetectorService(detector, ServiceConfig(stream_config=SCFG))
     sess = svc.open_stream()
     img = videos[2][0][0]
     fr = sess.submit_frame(videos[0][0][0])
@@ -80,16 +81,16 @@ def test_streams_and_oneshots_share_flush(detector, videos):
 
 
 def test_closed_stream_rejects_frames(detector, videos):
-    svc = DetectorService(detector, stream_config=SCFG)
+    svc = DetectorService(detector, ServiceConfig(stream_config=SCFG))
     sess = svc.open_stream()
     sess.close()
     with pytest.raises(RuntimeError, match="closed"):
         sess.submit_frame(videos[0][0][0])
-    assert svc.stats()["stream"]["sessions"] == 0
+    assert svc.stats().stream.sessions == 0
 
 
 def test_bad_frame_completes_with_error(detector, videos):
-    svc = DetectorService(detector, stream_config=SCFG)
+    svc = DetectorService(detector, ServiceConfig(stream_config=SCFG))
     sess = svc.open_stream()
     ok = sess.submit_frame(videos[0][0][0])
     bad = sess.submit_frame(np.zeros((HW, HW + 2), np.float32))  # shape change
