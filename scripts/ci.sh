@@ -10,8 +10,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "=== tier-1: pytest ==="
 python -m pytest -x -q
 
-echo "=== lint: dead stores (assignments overwritten before use) ==="
-python scripts/check_dead_stores.py src tests benchmarks scripts examples
+echo "=== analysis: repro.analysis (trace-safety, plan-IR contracts, kernel oracles) ==="
+python -m repro.analysis src tests benchmarks scripts examples --json ANALYSIS.json
+python - <<'EOF'
+# the gate must stay fast enough to run on every push (budget: < 5s)
+import json
+secs = json.load(open("ANALYSIS.json"))["seconds"]
+assert secs < 5.0, f"repro.analysis took {secs}s (budget 5s) — profile it"
+print(f"repro.analysis budget OK: {secs}s < 5s")
+EOF
 
 echo "=== smoke: packed-tail crossover (pallas == gather oracle, bit-exact) ==="
 python scripts/crossover_smoke.py

@@ -1,0 +1,49 @@
+"""Repo-native static analysis (``python -m repro.analysis``).
+
+The runtime analogue of the paper's task annotations is our
+:class:`repro.plan.CascadePlan` IR plus the kernel/oracle contracts in
+``repro.kernels`` — invariants the schedulers and engines *trust* but,
+until this package, nothing checked.  These rules make them lint-time
+errors instead of runtime surprises:
+
+==================  =====================================================
+TRACE_BRANCH        Python ``if``/``while``/``assert`` on a traced value
+                    inside a jitted / Pallas function
+TRACE_CONCRETE      ``bool()``/``int()``/``float()``/``np.asarray()``/
+                    ``.item()`` on a traced value (forces a device sync
+                    or breaks tracing)
+JIT_CACHE           ``jax.jit`` cache-key hazards: jit-of-lambda /
+                    jit-in-loop / immediately-invoked jit / fresh
+                    closures passed as static args
+TAIL_BACKEND        packed-tail backend string literals not in the
+                    allowed set (``kernels.packed_tail.BACKENDS`` +
+                    ``"auto"``)
+PLAN_GEOMETRY       hand-rolled plan-IR construction (``SegmentPlan``,
+                    ``SlotLayout``, ...) outside ``src/repro/plan/``
+LANE_BLOCK          hardcoded ``(8, 128)`` lane-block/tile literals
+                    outside ``kernels/`` + ``plan/``
+KERNEL_REF_TWIN     public kernel entry point without a ``*_ref`` oracle
+                    twin in ``kernels/ref.py`` / ``kernels/ops.py``
+KERNEL_REF_TEST     kernel/oracle pair never exercised together by any
+                    test file
+DEPRECATED_SURFACE  internal use of PR-7-deprecated serving surfaces
+                    (legacy ``DetectorService`` kwargs, dict-style
+                    ``stats()[...]`` access)
+DEAD_STORE          assignment overwritten before any use
+SUPPRESS            malformed ``# repro: ignore[...]`` comments
+==================  =====================================================
+
+Suppression: ``# repro: ignore[RULE] reason`` on the finding's line (or
+on a comment-only line directly above it).  The reason is mandatory.
+
+The package is stdlib-only (``ast``) and never imports the code it
+analyses.
+"""
+
+from .core import Finding, Rule, RULES, register, rule_ids
+from .engine import AnalysisResult, run_analysis
+from .cli import main
+from . import rules as _rules                # noqa: F401  (registers rules)
+
+__all__ = ["Finding", "Rule", "RULES", "register", "rule_ids",
+           "AnalysisResult", "run_analysis", "main"]

@@ -1,0 +1,137 @@
+"""Kernel-oracle coverage rules (cross-file).
+
+Every Pallas kernel in this repo is only trusted because a pure-jnp
+oracle twin reproduces it bit-for-bit (the ``*_ref`` functions in
+``kernels/ref.py`` / ``kernels/ops.py``) and tests race the two.  That
+convention is the whole verification story — so it is enforced:
+
+- ``KERNEL_REF_TWIN``: every public kernel entry point of
+  ``repro.kernels.ops`` (its ``__all__``, minus the ``*_ref`` names
+  themselves) must have a ``<name>_ref`` twin defined in
+  ``repro.kernels.ref`` or ``repro.kernels.ops``.
+- ``KERNEL_REF_TEST``: for each (kernel, twin) pair, at least one file
+  under ``tests/`` must reference *both* names — an oracle nobody races
+  the kernel against is dead weight, and a kernel nobody checks against
+  its oracle is unverified.
+
+The ``tests/`` tree is located relative to the ``ops.py`` file itself
+(the nearest ancestor holding a ``src`` directory), so fixture trees
+that mirror the repo layout exercise the rule hermetically.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from ..core import Finding, Rule, SourceFile, register
+
+_OPS_MODULE = "repro.kernels.ops"
+_REF_MODULE = "repro.kernels.ref"
+
+
+def _public_names(src: SourceFile) -> dict[str, int]:
+    """``__all__`` entries -> line of their def (fallback: module line 1);
+    if no ``__all__``, every top-level non-underscore function."""
+    def_lines = {stmt.name: stmt.lineno for stmt in src.tree.body
+                 if isinstance(stmt, ast.FunctionDef)}
+    for stmt in src.tree.body:
+        if isinstance(stmt, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in stmt.targets):
+            try:
+                names = ast.literal_eval(stmt.value)
+            except (ValueError, SyntaxError):
+                break
+            return {n: def_lines.get(n, stmt.lineno) for n in names}
+    return {n: ln for n, ln in def_lines.items() if not n.startswith("_")}
+
+
+def _defined_names(src: SourceFile) -> set[str]:
+    """Top-level defs + simple-name assignments (aliases count as twins)."""
+    out = set()
+    for stmt in src.tree.body:
+        if isinstance(stmt, ast.FunctionDef):
+            out.add(stmt.name)
+        elif isinstance(stmt, ast.Assign):
+            out.update(t.id for t in stmt.targets
+                       if isinstance(t, ast.Name))
+    return out
+
+
+def _tests_dir(ops_path: Path) -> Path | None:
+    for anc in ops_path.parents:
+        if (anc / "src").is_dir():
+            t = anc / "tests"
+            return t if t.is_dir() else None
+    return None
+
+
+@register
+class KernelOracleRule(Rule):
+    id = "KERNEL_REF_TWIN"
+    summary = ("public kernel entry point in kernels/ops.py without a "
+               "*_ref oracle twin in kernels/ref.py or ops.py")
+    scope = "project"
+
+    def check_project(self, project) -> list[Finding]:
+        ops = project.modules.get(_OPS_MODULE)
+        if ops is None:
+            return []
+        ref = project.modules.get(_REF_MODULE)
+        twins = _defined_names(ops)
+        if ref is not None:
+            twins |= _defined_names(ref)
+        findings = []
+        for name, line in sorted(_public_names(ops).items()):
+            if name.endswith("_ref"):
+                continue             # the oracle side of a pair
+            if f"{name}_ref" not in twins:
+                findings.append(Finding(
+                    ops.rel, line, 1, self.id,
+                    f"public kernel `{name}` has no `{name}_ref` oracle "
+                    f"twin in {_REF_MODULE} or {_OPS_MODULE}"))
+        return findings
+
+
+@register
+class KernelOracleTestRule(Rule):
+    id = "KERNEL_REF_TEST"
+    summary = ("kernel/oracle pair never referenced together by any "
+               "test file under tests/")
+    scope = "project"
+
+    def check_project(self, project) -> list[Finding]:
+        ops = project.modules.get(_OPS_MODULE)
+        if ops is None:
+            return []
+        ref = project.modules.get(_REF_MODULE)
+        twins = _defined_names(ops)
+        if ref is not None:
+            twins |= _defined_names(ref)
+        tests = _tests_dir(ops.path)
+        if tests is None:
+            return []
+        test_texts = {p: p.read_text()
+                      for p in sorted(tests.glob("**/*.py"))
+                      if "__pycache__" not in p.relative_to(tests).parts
+                      and "fixtures" not in p.relative_to(tests).parts}
+        findings = []
+        for name, line in sorted(_public_names(ops).items()):
+            twin = f"{name}_ref"
+            if name.endswith("_ref") or twin not in twins:
+                continue             # KERNEL_REF_TWIN owns the missing case
+            pat_k = re.compile(rf"\b{re.escape(name)}\b")
+            pat_r = re.compile(rf"\b{re.escape(twin)}\b")
+            # the kernel name is a prefix of the twin's, so only count
+            # kernel mentions that are not actually the twin's
+            if not any(pat_r.search(t)
+                       and pat_k.search(re.sub(pat_r, "", t))
+                       for t in test_texts.values()):
+                findings.append(Finding(
+                    ops.rel, line, 1, self.id,
+                    f"no test file references both `{name}` and its "
+                    f"oracle twin `{twin}` — add a kernel-vs-oracle "
+                    f"test under tests/"))
+        return findings

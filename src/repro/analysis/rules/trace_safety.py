@@ -1,0 +1,877 @@
+"""Trace-safety rules: host-Python control flow on traced values, and
+``jax.jit`` cache-key hazards.
+
+The engines keep single/batch/stream bit-identical by compiling *pure*
+programs: every jitted builder (``level_fn``, ``batch_fn``, ``frame_fn``)
+and every Pallas kernel body must branch only on host statics — a Python
+``if``/``while``/``assert`` on a value derived from a traced argument
+either crashes at trace time (``TracerBoolConversionError``) or, worse,
+silently bakes one branch into the compiled program.  Likewise
+``bool()``/``int()``/``float()``/``np.asarray()``/``.item()`` force a
+concretization.  Nothing checked this statically; reviewers carried the
+invariant in their heads.
+
+``TRACE_BRANCH`` / ``TRACE_CONCRETE`` implement a small interprocedural
+taint pass over the scanned file set:
+
+1. *Roots*: functions wrapped by ``jax.jit`` (decorator, direct call,
+   through ``functools.partial``/``jax.vmap``) and kernel bodies passed
+   to ``pl.pallas_call`` — their parameters are traced, minus
+   ``static_argnums``/``static_argnames`` and ``partial``-bound names.
+2. *Propagation*: taint flows through assignments and into callees the
+   pass can resolve (same scope chain, module level, ``from x import y``
+   within the scanned set, ``jax.lax`` combinators like ``fori_loop`` /
+   ``scan`` / ``cond`` / ``while_loop`` / ``vmap``).  Static projections
+   break taint: ``.shape``/``.ndim``/``.dtype``/``.size``, ``len()``,
+   ``isinstance()``, ``x is None``.
+3. *Findings*: host branches on tainted tests, and concretizing calls on
+   tainted values.
+
+``JIT_CACHE`` is a companion pattern rule: ``jax.jit`` called inside a
+loop (a fresh jitted callable per iteration), ``jax.jit(<lambda>)``
+immediately invoked (retrace per call), and lambdas / local ``def``s
+passed in an argument slot the callee declared static (every fresh
+closure is a new cache key — the silent-recompile hazard).
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from ..core import Finding, Rule, SourceFile, register
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "name"}
+_STATIC_FUNCS = {"len", "isinstance", "type", "range", "enumerate",
+                 "hasattr", "getattr", "id", "repr", "str", "print"}
+_CONCRETIZE_FUNCS = {"bool", "int", "float", "complex"}
+_CONCRETIZE_METHODS = {"item", "tolist", "__bool__", "__float__"}
+_NUMPY_CONCRETIZE = {"asarray", "array", "float32", "float64", "int32",
+                     "int64"}
+_MAX_DEPTH = 12                      # nested-def inline analysis guard
+
+
+# --------------------------------------------------------------- scopes
+@dataclass
+class _Scope:
+    node: ast.AST                    # Module | FunctionDef | Lambda
+    parent: "_Scope | None"
+    defs: dict[str, ast.FunctionDef] = field(default_factory=dict)
+    assigns: dict[str, ast.expr] = field(default_factory=dict)
+
+    def resolve(self, name: str):
+        """Nearest binding of ``name``: a def node or an assigned expr."""
+        s: _Scope | None = self
+        while s is not None:
+            if name in s.defs:
+                return s.defs[name], s
+            if name in s.assigns:
+                return s.assigns[name], s
+            s = s.parent
+        return None, None
+
+
+def _build_scopes(src: SourceFile) -> dict[int, _Scope]:
+    """Map id(function node) -> its enclosing :class:`_Scope` tree."""
+    scopes: dict[int, _Scope] = {}
+
+    def walk(node: ast.AST, scope: _Scope) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope.defs[child.name] = child
+                inner = _Scope(child, scope)
+                scopes[id(child)] = inner
+                walk(child, inner)
+            elif isinstance(child, ast.Lambda):
+                inner = _Scope(child, scope)
+                scopes[id(child)] = inner
+                walk(child, inner)
+            elif isinstance(child, ast.ClassDef):
+                walk(child, scope)   # methods resolve in the outer scope
+            else:
+                if isinstance(child, ast.Assign) \
+                        and len(child.targets) == 1 \
+                        and isinstance(child.targets[0], ast.Name):
+                    scope.assigns[child.targets[0].id] = child.value
+                walk(child, scope)
+
+    root = _Scope(src.tree, None)
+    scopes[id(src.tree)] = root
+    walk(src.tree, root)
+    return scopes
+
+
+def _alias_map(src: SourceFile) -> dict[str, str]:
+    """name -> dotted module, over *all* imports in the file (module and
+    function scope: the engines import ``repro.kernels.ops`` lazily)."""
+    pkg = (src.module or "").rsplit(".", 1)[0] if src.module else ""
+    out: dict[str, str] = {}
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Import):
+            for al in node.names:
+                out[al.asname or al.name.split(".")[0]] = al.name
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level:
+                up = pkg.split(".") if pkg else []
+                if node.level > 1:
+                    up = up[:len(up) - (node.level - 1)]
+                base = ".".join(up + ([node.module] if node.module else []))
+            for al in node.names:
+                out[al.asname or al.name] = f"{base}.{al.name}"
+    return out
+
+
+def _dotted(node: ast.expr, aliases: dict[str, str]) -> str | None:
+    """Dotted name of an expression like ``jax.jit`` / ``pl.pallas_call``,
+    with the leading alias expanded through the file's imports."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    head = aliases.get(node.id, node.id)
+    return ".".join([head] + list(reversed(parts)))
+
+
+def _defaulted_params(fn: ast.FunctionDef | ast.Lambda) -> set[str]:
+    a = fn.args
+    pos = a.posonlyargs + a.args
+    out = {p.arg for p in pos[len(pos) - len(a.defaults):]} \
+        if a.defaults else set()
+    out |= {p.arg for p, d in zip(a.kwonlyargs, a.kw_defaults)
+            if d is not None}
+    return out
+
+
+def _param_names(fn: ast.FunctionDef | ast.Lambda) -> list[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _jit_statics(call: ast.Call) -> set[str] | None:
+    """Static parameter *names* declared on a jit call; None if it also
+    declares positional statics we cannot map here."""
+    names: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            try:
+                v = ast.literal_eval(kw.value)
+            except (ValueError, SyntaxError):
+                return None
+            names.update([v] if isinstance(v, str) else v)
+        elif kw.arg == "static_argnums":
+            return None              # positional statics: handled by caller
+    return names
+
+
+@dataclass(frozen=True)
+class _FuncKey:
+    rel: str
+    line: int
+    name: str
+
+
+@dataclass
+class _Target:
+    fn: ast.FunctionDef | ast.Lambda
+    src: SourceFile
+    scope: _Scope
+
+
+# ------------------------------------------------------------ the rules
+def _shared_pass(project) -> list[Finding]:
+    """Both TRACE_* rules share one taint pass; cache it on the project so
+    ``--select`` of either rule (or both) runs the analysis exactly once."""
+    cached = getattr(project, "_trace_pass_findings", None)
+    if cached is None:
+        cached = _TracePass(project).run()
+        project._trace_pass_findings = cached
+    return cached
+
+
+@register
+class TraceBranchRule(Rule):
+    id = "TRACE_BRANCH"
+    summary = ("host `if`/`while`/`assert` on a traced value inside a "
+               "jitted / Pallas function")
+    scope = "project"
+
+    def check_project(self, project) -> list[Finding]:
+        return [f for f in _shared_pass(project) if f.rule == self.id]
+
+
+@register
+class TraceConcreteRule(Rule):
+    id = "TRACE_CONCRETE"
+    summary = ("bool()/int()/float()/np.asarray()/.item() on a traced "
+               "value inside a jitted / Pallas function")
+    scope = "project"
+
+    def check_project(self, project) -> list[Finding]:
+        return [f for f in _shared_pass(project) if f.rule == self.id]
+
+
+class _TracePass:
+    """One whole-project taint pass emitting TRACE_BRANCH and
+    TRACE_CONCRETE findings."""
+
+    def __init__(self, project):
+        self.project = project
+        self.scopes: dict[str, dict[int, _Scope]] = {}
+        self.aliases: dict[str, dict[str, str]] = {}
+        self.taint: dict[_FuncKey, set[str]] = {}
+        self.targets: dict[_FuncKey, _Target] = {}
+        self.worklist: list[_FuncKey] = []
+        self.findings: set[Finding] = set()
+
+    # ------------------------------------------------------------ setup
+    def _file_scopes(self, src: SourceFile) -> dict[int, _Scope]:
+        if src.rel not in self.scopes:
+            self.scopes[src.rel] = _build_scopes(src)
+        return self.scopes[src.rel]
+
+    def _file_aliases(self, src: SourceFile) -> dict[str, str]:
+        if src.rel not in self.aliases:
+            self.aliases[src.rel] = _alias_map(src)
+        return self.aliases[src.rel]
+
+    def run(self) -> list[Finding]:
+        for src in self.project.files:
+            if src.is_test:
+                continue
+            self._collect_roots(src)
+        guard = 0
+        while self.worklist and guard < 10000:
+            guard += 1
+            key = self.worklist.pop()
+            tgt = self.targets[key]
+            _FunctionAnalysis(self, tgt, set(self.taint[key])).run()
+        return sorted(self.findings)
+
+    def _add_target(self, fn, src: SourceFile, scope: _Scope,
+                    tainted: set[str]) -> None:
+        key = _FuncKey(src.rel, fn.lineno, getattr(fn, "name", "<lambda>"))
+        known = self.taint.setdefault(key, set())
+        if tainted - known or key not in self.targets:
+            known |= tainted
+            self.targets[key] = _Target(fn, src, scope)
+            if key not in self.worklist:
+                self.worklist.append(key)
+
+    # ------------------------------------------------------------ roots
+    def _collect_roots(self, src: SourceFile) -> None:
+        scopes = self._file_scopes(src)
+        aliases = self._file_aliases(src)
+
+        # scope-aware walk: `jax.jit(batch_fn)` sites inside a builder
+        # resolve the *nested* def, and `pl.pallas_call(kernel)` resolves
+        # the local `kernel = partial(_kernel, ...)` binding
+        def visit(node: ast.AST, scope: _Scope) -> None:
+            for child in ast.iter_child_nodes(node):
+                child_scope = scope
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda)):
+                    child_scope = scopes.get(id(child), scope)
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    statics = self._decorator_statics(child, aliases)
+                    if statics is not None:
+                        self._add_target(child, src, scope,
+                                         set(_param_names(child)) - statics)
+                elif isinstance(child, ast.Call):
+                    self._root_call(child, src, scope, scopes, aliases)
+                visit(child, child_scope)
+
+        visit(src.tree, scopes[id(src.tree)])
+
+    def _root_call(self, node: ast.Call, src: SourceFile, scope: _Scope,
+                   scopes, aliases) -> None:
+        name = _dotted(node.func, aliases)
+        wrap = None
+        if name in ("jax.jit", "jax.pjit", "jit"):
+            wrap = "jit"
+        elif name is not None and name.endswith("pallas_call"):
+            wrap = "pallas"
+        elif isinstance(node.func, ast.Call):
+            # partial(jax.jit, static_argnames=...)(kernel_fn)
+            inner = node.func
+            if _dotted(inner.func, aliases) in (
+                    "functools.partial", "partial") and inner.args \
+                    and _dotted(inner.args[0], aliases) in (
+                        "jax.jit", "jax.pjit", "jit"):
+                statics = _jit_statics(inner)
+                for arg in node.args[:1]:
+                    self._root_from_expr(arg, src, scope, scopes, aliases,
+                                         statics or set())
+            return
+        if wrap is None or not node.args:
+            return
+        statics = _jit_statics(node) if wrap == "jit" else set()
+        self._root_from_expr(node.args[0], src, scope, scopes, aliases,
+                             statics if statics is not None else set())
+
+    def _decorator_statics(self, fn, aliases) -> set[str] | None:
+        """Static names if ``fn`` is jit-decorated, else None."""
+        for dec in fn.decorator_list:
+            name = _dotted(dec, aliases)
+            if name in ("jax.jit", "jax.pjit", "jit"):
+                return set()
+            if isinstance(dec, ast.Call):
+                cname = _dotted(dec.func, aliases)
+                if cname in ("jax.jit", "jax.pjit", "jit"):
+                    return _jit_statics(dec) or set()
+                if cname in ("functools.partial", "partial") and dec.args \
+                        and _dotted(dec.args[0], aliases) in (
+                            "jax.jit", "jax.pjit", "jit"):
+                    return _jit_statics(dec) or set()
+        return None
+
+    def _root_from_expr(self, expr: ast.expr, src: SourceFile,
+                        scope: _Scope, scopes, aliases, statics: set[str],
+                        depth: int = 0) -> None:
+        """Resolve the function being jitted/pallas-wrapped and mark its
+        parameters traced (minus ``statics``)."""
+        if depth > 4:
+            return
+        if isinstance(expr, ast.Lambda):
+            sc = scopes.get(id(expr))
+            sc = sc.parent if sc else scope
+            # the `lambda x, _bk=bk: ...` idiom binds a concrete closure
+            # value through a default; those params trace as constants
+            self._add_target(expr, src, sc,
+                             set(_param_names(expr)) - statics
+                             - _defaulted_params(expr))
+            return
+        if isinstance(expr, ast.Call):
+            name = _dotted(expr.func, aliases)
+            if name in ("jax.vmap", "vmap", "jax.checkpoint",
+                        "jax.remat", "jax.named_call"):
+                if expr.args:
+                    self._root_from_expr(expr.args[0], src, scope, scopes,
+                                         aliases, statics, depth + 1)
+            elif name in ("functools.partial", "partial") and expr.args:
+                bound = {kw.arg for kw in expr.keywords if kw.arg}
+                self._root_from_expr(expr.args[0], src, scope, scopes,
+                                     aliases, statics | bound, depth + 1)
+            # builder calls (jax.jit(make_step(model)) or
+            # jax.jit(self._raw_level_fn(h, w))): resolve the builder and
+            # treat the nested def it returns as the root.  Methods are
+            # registered in their class's enclosing scope, so the bare
+            # attr name resolves for the `self.` form.
+            elif isinstance(expr.func, (ast.Name, ast.Attribute)):
+                if isinstance(expr.func, ast.Name):
+                    bname = expr.func.id
+                elif isinstance(expr.func.value, ast.Name) \
+                        and expr.func.value.id in ("self", "cls"):
+                    bname = expr.func.attr
+                else:
+                    return
+                built = self._resolve_name(bname, src, scope, aliases)
+                if built is not None:
+                    fn, fsrc, fscope = built
+                    inner = _returned_def(fn, fscope,
+                                          self._file_scopes(fsrc))
+                    if inner is not None:
+                        node, sc = inner
+                        self._add_target(
+                            node, fsrc, sc,
+                            set(_param_names(node)) - statics)
+            return
+        if isinstance(expr, ast.Name):
+            built = self._resolve_name(expr.id, src, scope, aliases)
+            if built is not None:
+                fn, fsrc, fscope = built
+                if isinstance(fn, (ast.FunctionDef, ast.Lambda)):
+                    self._add_target(fn, fsrc, fscope,
+                                     set(_param_names(fn)) - statics)
+                else:                # name bound to an expression: unwrap
+                    self._root_from_expr(fn, fsrc, fscope,
+                                         self._file_scopes(fsrc),
+                                         self._file_aliases(fsrc),
+                                         statics, depth + 1)
+
+    def _resolve_name(self, name: str, src: SourceFile, scope: _Scope,
+                      aliases):
+        """Resolve ``name`` to (node, file, scope): a def/lambda/expr from
+        the lexical scope chain (nested defs, local bindings, module
+        level), else a scanned imported module."""
+        node, sc = scope.resolve(name)
+        if node is not None:
+            return node, src, sc
+        target = aliases.get(name)
+        if target and "." in target:
+            mod, sym = target.rsplit(".", 1)
+            ms = self.project.symbols(mod)
+            if ms and sym in ms.functions:
+                fsrc = self.project.modules[mod]
+                fscopes = self._file_scopes(fsrc)
+                return ms.functions[sym], fsrc, fscopes[id(fsrc.tree)]
+        return None
+
+    # ------------------------------------------------------- call edges
+    def call_into(self, fn: ast.FunctionDef, src: SourceFile,
+                  scope: _Scope, tainted_params: set[str]) -> None:
+        self._add_target(fn, src, scope, tainted_params)
+
+
+def _returned_def(fn, scope: _Scope, scopes: dict[int, _Scope],
+                  depth: int = 0):
+    """The nested def/lambda a builder function returns (possibly through
+    ``jax.jit(...)`` or a chain of builder calls — the engines cache
+    ``self._raw_level_fns[key] = self._build_level_fn(lp)`` and return the
+    cache slot, so unresolvable returns fall back to following the
+    builders the function calls), else None."""
+    if depth > 3 or not isinstance(fn, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+        return None
+    inner_scope = scopes.get(id(fn))
+    if inner_scope is None:
+        return None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and node.value is not None:
+            val = node.value
+            if isinstance(val, ast.Call) and val.args:
+                val = val.args[0]    # return jax.jit(inner)
+            if isinstance(val, ast.Name):
+                target, sc = inner_scope.resolve(val.id)
+                if isinstance(target, ast.FunctionDef):
+                    return target, sc
+            if isinstance(val, ast.Lambda):
+                return val, scopes.get(id(val), inner_scope).parent
+    # fallback: any local/method builder this function calls that itself
+    # returns a nested def (the cached-slot pattern above)
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name):
+            bname = f.id
+        elif isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id in ("self", "cls"):
+            bname = f.attr
+        else:
+            continue
+        target, sc = inner_scope.resolve(bname)
+        if isinstance(target, ast.FunctionDef) and target is not fn:
+            got = _returned_def(target, sc, scopes, depth + 1)
+            if got is not None:
+                return got
+    return None
+
+
+# ------------------------------------------------- per-function analysis
+class _FunctionAnalysis:
+    """Taint one function body; emit findings; enqueue tainted callees."""
+
+    def __init__(self, owner: _TracePass, tgt: _Target,
+                 tainted: set[str], depth: int = 0):
+        self.owner = owner
+        self.tgt = tgt
+        self.src = tgt.src
+        self.aliases = owner._file_aliases(tgt.src)
+        self.scopes = owner._file_scopes(tgt.src)
+        self.taint = set(tainted)
+        self.depth = depth
+        fn = tgt.fn
+        self.fname = getattr(fn, "name", "<lambda>")
+        self.body = (fn.body if isinstance(fn.body, list) else
+                     [ast.Expr(fn.body)])
+
+    # --------------------------------------------------------- helpers
+    def is_tainted(self, node: ast.expr | None) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.taint
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            fname = _dotted(node.func, self.aliases)
+            if fname in _STATIC_FUNCS:
+                return False
+            parts = [node.func] + list(node.args) \
+                + [kw.value for kw in node.keywords]
+            return any(self.is_tainted(p) for p in parts)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False         # `x is None` is static under tracing
+            return any(self.is_tainted(c)
+                       for c in [node.left] + node.comparators)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value) or self.is_tainted(node.slice)
+        if isinstance(node, (ast.BoolOp, ast.BinOp, ast.UnaryOp, ast.IfExp,
+                             ast.Tuple, ast.List, ast.Set, ast.Dict,
+                             ast.Starred, ast.JoinedStr, ast.FormattedValue,
+                             ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp, ast.Slice, ast.NamedExpr)):
+            return any(self.is_tainted(c)
+                       for c in ast.iter_child_nodes(node)
+                       if isinstance(c, ast.expr))
+        return False
+
+    def _emit(self, node: ast.AST, rule: str, message: str) -> None:
+        self.owner.findings.add(Finding(
+            self.src.rel, node.lineno, node.col_offset + 1, rule, message))
+
+    # ------------------------------------------------------------- run
+    def run(self) -> None:
+        # two forward passes so loop-carried taint stabilises before the
+        # reporting pass
+        self._pass_body(self.body, report=False)
+        self._pass_body(self.body, report=True)
+
+    def _assign_names(self, target: ast.expr) -> list[str]:
+        if isinstance(target, ast.Name):
+            return [target.id]
+        if isinstance(target, (ast.Tuple, ast.List)):
+            return [n for e in target.elts for n in self._assign_names(e)]
+        if isinstance(target, ast.Starred):
+            return self._assign_names(target.value)
+        return []
+
+    def _pass_body(self, body: list[ast.stmt], report: bool) -> None:
+        for stmt in body:
+            self._pass_stmt(stmt, report)
+
+    def _pass_stmt(self, stmt: ast.stmt, report: bool) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return                   # analysed when called
+        if isinstance(stmt, ast.Assign):
+            tainted = self.is_tainted(stmt.value)
+            for t in stmt.targets:
+                for name in self._assign_names(t):
+                    (self.taint.add if tainted
+                     else self.taint.discard)(name)
+            if report:
+                self._scan_expr(stmt.value)
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                tainted = self.is_tainted(stmt.value)
+                for name in self._assign_names(stmt.target):
+                    (self.taint.add if tainted
+                     else self.taint.discard)(name)
+                if report:
+                    self._scan_expr(stmt.value)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            if self.is_tainted(stmt.value):
+                self.taint.update(self._assign_names(stmt.target))
+            if report:
+                self._scan_expr(stmt.value)
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            if report and self.is_tainted(stmt.test):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                self._emit(stmt, "TRACE_BRANCH",
+                           f"host `{kind}` on a traced value inside "
+                           f"`{self.fname}` — branch on statics or use "
+                           f"jnp.where/lax.cond")
+            if report:
+                self._scan_expr(stmt.test)
+            self._pass_body(stmt.body, report)
+            self._pass_body(stmt.orelse, report)
+            return
+        if isinstance(stmt, ast.Assert):
+            if report and self.is_tainted(stmt.test):
+                self._emit(stmt, "TRACE_BRANCH",
+                           f"host `assert` on a traced value inside "
+                           f"`{self.fname}` — use checkify or assert on "
+                           f"static shapes only")
+            return
+        if isinstance(stmt, ast.For):
+            if self.is_tainted(stmt.iter):
+                self.taint.update(self._assign_names(stmt.target))
+            if report:
+                self._scan_expr(stmt.iter)
+            self._pass_body(stmt.body, report)
+            self._pass_body(stmt.orelse, report)
+            return
+        if isinstance(stmt, ast.With):
+            if report:
+                for item in stmt.items:
+                    self._scan_expr(item.context_expr)
+            self._pass_body(stmt.body, report)
+            return
+        if isinstance(stmt, ast.Try):
+            self._pass_body(stmt.body, report)
+            for h in stmt.handlers:
+                self._pass_body(h.body, report)
+            self._pass_body(stmt.orelse, report)
+            self._pass_body(stmt.finalbody, report)
+            return
+        if isinstance(stmt, (ast.Return, ast.Expr)):
+            if report and stmt.value is not None:
+                self._scan_expr(stmt.value)
+            return
+        if isinstance(stmt, ast.Raise):
+            return                   # raising is host-side by definition
+
+    # ----------------------------------------------------- expressions
+    def _scan_expr(self, expr: ast.expr) -> None:
+        """Reporting walk: concretization calls + call-edge propagation."""
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            self._check_concretize(node)
+            self._propagate_call(node)
+
+    def _check_concretize(self, call: ast.Call) -> None:
+        func = call.func
+        if isinstance(func, ast.Name) and func.id in _CONCRETIZE_FUNCS:
+            if any(self.is_tainted(a) for a in call.args):
+                self._emit(call, "TRACE_CONCRETE",
+                           f"`{func.id}()` on a traced value inside "
+                           f"`{self.fname}` forces concretization")
+        elif isinstance(func, ast.Attribute):
+            if func.attr in _CONCRETIZE_METHODS \
+                    and self.is_tainted(func.value):
+                self._emit(call, "TRACE_CONCRETE",
+                           f"`.{func.attr}()` on a traced value inside "
+                           f"`{self.fname}` forces a host sync")
+            elif func.attr in _NUMPY_CONCRETIZE \
+                    and isinstance(func.value, ast.Name) \
+                    and self.aliases.get(func.value.id, "") == "numpy" \
+                    and any(self.is_tainted(a) for a in call.args):
+                self._emit(call, "TRACE_CONCRETE",
+                           f"`np.{func.attr}()` on a traced value inside "
+                           f"`{self.fname}` forces device->host transfer "
+                           f"(use jnp)")
+
+    # ---------------------------------------------------- call edges
+    def _propagate_call(self, call: ast.Call) -> None:
+        name = _dotted(call.func, self.aliases)
+        # jax.lax combinators hand traced operands to their function args
+        if name in ("jax.lax.fori_loop", "lax.fori_loop"):
+            self._taint_fn_arg(call.args[2] if len(call.args) > 2 else None)
+            return
+        if name in ("jax.lax.while_loop", "lax.while_loop",
+                    "jax.lax.scan", "lax.scan", "jax.lax.map", "lax.map"):
+            self._taint_fn_arg(call.args[0] if call.args else None)
+            if name.endswith("while_loop") and len(call.args) > 1:
+                self._taint_fn_arg(call.args[1])
+            return
+        if name in ("jax.lax.cond", "lax.cond", "jax.lax.switch",
+                    "lax.switch"):
+            for arg in call.args[1:]:
+                self._taint_fn_arg(arg, maybe=True)
+            return
+        # vmap(f, ...)(args): map outer args onto f's params
+        if isinstance(call.func, ast.Call):
+            inner_name = _dotted(call.func.func, self.aliases)
+            if inner_name in ("jax.vmap", "vmap", "jax.jit", "jit") \
+                    and call.func.args:
+                self._call_named(call.func.args[0], call)
+            return
+        self._call_named(call.func, call)
+
+    def _taint_fn_arg(self, expr: ast.expr | None,
+                      maybe: bool = False) -> None:
+        """Treat ``expr`` as a function whose every param is traced."""
+        if expr is None:
+            return
+        fn, scope = self._resolve_callable(expr)
+        if fn is None:
+            return
+        if not isinstance(fn, (ast.FunctionDef, ast.Lambda)):
+            return
+        self._analyze_callee(fn, scope, set(_param_names(fn)))
+
+    def _call_named(self, func_expr: ast.expr, call: ast.Call) -> None:
+        fn, scope = self._resolve_callable(func_expr)
+        if fn is None or not isinstance(fn, (ast.FunctionDef, ast.Lambda)):
+            return
+        params = _param_names(fn)
+        tainted: set[str] = set()
+        for i, arg in enumerate(call.args):
+            if isinstance(arg, ast.Starred):
+                continue
+            if i < len(params) and self.is_tainted(arg):
+                tainted.add(params[i])
+        for kw in call.keywords:
+            if kw.arg and kw.arg in params and self.is_tainted(kw.value):
+                tainted.add(kw.arg)
+        if tainted:
+            self._analyze_callee(fn, scope, tainted)
+
+    def _resolve_callable(self, expr: ast.expr):
+        """(def node, defining scope) for a callable expression, searching
+        the lexical scope chain, the module, then scanned imports."""
+        if isinstance(expr, ast.Lambda):
+            sc = self.scopes.get(id(expr))
+            return expr, (sc.parent if sc else None)
+        if isinstance(expr, ast.Name):
+            scope = self.scopes.get(id(self.tgt.fn))
+            node, sc = (scope.resolve(expr.id) if scope
+                        else (None, None))
+            if isinstance(node, (ast.FunctionDef, ast.Lambda)):
+                return node, sc
+            resolved = self.owner._resolve_name(
+                expr.id, self.src, self.scopes[id(self.src.tree)],
+                self.aliases)
+            if resolved is not None:
+                fn, fsrc, fscope = resolved
+                if isinstance(fn, (ast.FunctionDef, ast.Lambda)):
+                    if fsrc.rel != self.src.rel:
+                        # cross-file: go through the shared worklist
+                        return ("xfile", fn, fsrc, fscope), None
+                    return fn, fscope
+            return None, None
+        if isinstance(expr, ast.Attribute):
+            # module alias attribute (packed_tail.stage_sums)
+            target = _dotted(expr, self.aliases)
+            if target and "." in target:
+                mod, sym = target.rsplit(".", 1)
+                ms = self.owner.project.symbols(mod)
+                if ms and sym in ms.functions:
+                    fsrc = self.owner.project.modules[mod]
+                    fscope = self.owner._file_scopes(fsrc)[
+                        id(fsrc.tree)]
+                    return ("xfile", ms.functions[sym], fsrc, fscope), None
+            return None, None
+        return None, None
+
+    def _analyze_callee(self, fn, scope, tainted_params: set[str]) -> None:
+        if isinstance(fn, tuple) and fn and fn[0] == "xfile":
+            _tag, node, fsrc, fscope = fn
+            self.owner.call_into(node, fsrc, fscope, tainted_params)
+            return
+        # local / nested def: closure taint flows in, params shadow
+        if self.depth >= _MAX_DEPTH:
+            return
+        params = set(_param_names(fn))
+        closure_taint = (self.taint - params) | tainted_params
+        key = (id(fn), frozenset(closure_taint))
+        seen = getattr(self, "_seen", None)
+        if seen is None:
+            seen = self._seen = set()
+        if key in seen:
+            return
+        seen.add(key)
+        sub = _FunctionAnalysis(
+            self.owner,
+            _Target(fn, self.src, scope or self.scopes[id(self.src.tree)]),
+            closure_taint, self.depth + 1)
+        sub._seen = seen
+        sub.run()
+
+
+# ------------------------------------------------------ jit cache-keys
+@register
+class JitCacheRule(Rule):
+    id = "JIT_CACHE"
+    summary = ("jax.jit usage that defeats the compilation cache "
+               "(jit in a loop, jit(<lambda>) invoked inline, lambda "
+               "in a static arg slot)")
+
+    def check(self, src: SourceFile, project) -> list[Finding]:
+        aliases = _alias_map(src)
+        findings: list[Finding] = []
+        # name -> static parameter names, for jit-wrapped callables this
+        # file can see (module-level wrappers + decorated defs, local and
+        # imported from scanned modules)
+        statics = _static_decls(src, aliases)
+        for local, target in aliases.items():
+            if "." not in target or local in statics:
+                continue
+            mod, sym = target.rsplit(".", 1)
+            other = project.modules.get(mod)
+            if other is not None:
+                osym = _static_decls(other, _alias_map(other))
+                if sym in osym:
+                    statics[local] = osym[sym]
+
+        def is_jit(call: ast.Call) -> bool:
+            return _dotted(call.func, aliases) in ("jax.jit", "jax.pjit",
+                                                   "jit")
+
+        def walk(node: ast.AST, in_loop: bool, in_func: bool,
+                 parent_call: ast.Call | None) -> None:
+            for child in ast.iter_child_nodes(node):
+                child_in_loop = in_loop or isinstance(
+                    node, (ast.For, ast.While)) and child in (
+                        getattr(node, "body", ()) or [])
+                child_in_func = in_func or isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                if isinstance(child, ast.Call):
+                    if is_jit(child):
+                        if child_in_loop:
+                            findings.append(Finding(
+                                src.rel, child.lineno,
+                                child.col_offset + 1, self.id,
+                                "jax.jit called inside a loop — each "
+                                "iteration builds a fresh jitted callable "
+                                "with its own cache; hoist the jit out "
+                                "and pass loop state as arguments"))
+                        elif child_in_func and parent_call is not None \
+                                and parent_call.func is child \
+                                and child.args \
+                                and isinstance(child.args[0], ast.Lambda):
+                            findings.append(Finding(
+                                src.rel, child.lineno,
+                                child.col_offset + 1, self.id,
+                                "jax.jit(<lambda>) invoked inline — the "
+                                "lambda is a new object every call, so "
+                                "every call retraces; define the "
+                                "function once and jit it once"))
+                    else:
+                        fname = None
+                        if isinstance(child.func, ast.Name):
+                            fname = child.func.id
+                        if fname in statics:
+                            for kw in child.keywords:
+                                if kw.arg in statics[fname] \
+                                        and isinstance(kw.value, ast.Lambda):
+                                    findings.append(Finding(
+                                        src.rel, kw.value.lineno,
+                                        kw.value.col_offset + 1, self.id,
+                                        f"lambda passed as static arg "
+                                        f"`{kw.arg}` of jitted "
+                                        f"`{fname}` — a fresh closure is "
+                                        f"a new cache key every call"))
+                    walk(child, child_in_loop, child_in_func, child)
+                else:
+                    walk(child, child_in_loop, child_in_func, None)
+
+        walk(src.tree, False, False, None)
+        return findings
+
+
+def _static_decls(src: SourceFile, aliases: dict[str, str]
+                  ) -> dict[str, set[str]]:
+    """name -> declared static arg names for jit wrappers in this file."""
+    out: dict[str, set[str]] = {}
+    for stmt in src.tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and isinstance(stmt.value, ast.Call) \
+                and _dotted(stmt.value.func, aliases) in (
+                    "jax.jit", "jax.pjit", "jit"):
+            names = _jit_statics(stmt.value)
+            if names:
+                out[stmt.targets[0].id] = names
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in stmt.decorator_list:
+                if isinstance(dec, ast.Call):
+                    cname = _dotted(dec.func, aliases)
+                    names = None
+                    if cname in ("jax.jit", "jax.pjit", "jit"):
+                        names = _jit_statics(dec)
+                    elif cname in ("functools.partial", "partial") \
+                            and dec.args \
+                            and _dotted(dec.args[0], aliases) in (
+                                "jax.jit", "jax.pjit", "jit"):
+                        names = _jit_statics(dec)
+                    if names:
+                        out[stmt.name] = names
+    return out

@@ -280,6 +280,7 @@ def measure_rungs(cascade: Cascade, *, interpret: bool = True,
     for size in sizes:
         imgi, base, stride, ys, xs, inv = sample(size)
         for bk in BACKENDS:
+            # repro: ignore[JIT_CACHE] bench harness: one fresh jitted fn per (size, backend) point is the measurement unit; compile cost is excluded by the warm-up call below
             fn = jax.jit(lambda c, iif, iv, _bk=bk: stage_sums(
                 c, cascade, 0, n_stages, iif, imgi, base, stride, ys, xs,
                 iv, backend=_bk, interpret=interpret))

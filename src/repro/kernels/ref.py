@@ -137,3 +137,19 @@ def dense_stage_sums_batch_ref(rect_xywh: jax.Array, rect_w: jax.Array,
     return jax.vmap(lambda ii_b, inv_b: dense_stage_sums_ref(
         rect_xywh, rect_w, wc_threshold, left_val, right_val, ii_b, inv_b)
     )(ii, inv_sigma)
+
+
+def window_inv_sigma_grid_ref(ii_pair: jax.Array, ny: int, nx: int,
+                              window: int = WINDOW) -> jax.Array:
+    """(ny, nx) 1/sigma grid from the stacked (2, H+1, W+1) padded SAT
+    pair — oracle twin of :func:`repro.kernels.ops.window_inv_sigma_grid`
+    (same stacked-pair calling convention, pure jnp)."""
+    return window_inv_sigma_ref(ii_pair[0], ii_pair[1], ny, nx, window)
+
+
+def window_inv_sigma_grid_batch_ref(ii_pairs: jax.Array, ny: int, nx: int,
+                                    window: int = WINDOW) -> jax.Array:
+    """(B, ny, nx) 1/sigma grids from stacked (B, 2, H+1, W+1) SAT pairs —
+    oracle twin of :func:`repro.kernels.ops.window_inv_sigma_grid_batch`."""
+    return window_inv_sigma_batch_ref(ii_pairs[:, 0], ii_pairs[:, 1],
+                                      ny, nx, window)

@@ -9,6 +9,11 @@ import pytest
 # spawn subprocesses or use tests/distributed/conftest.py.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# fixtures/ holds deliberately-violating inputs for the repro.analysis rule
+# tests (including test_*.py files inside mirrored repo trees) — data, not
+# tests; keep pytest from collecting them
+collect_ignore = ["fixtures"]
+
 
 # ---------------------------------------------------------------------------
 # hypothesis degradation guard: when hypothesis is not installed (it is a

@@ -1,0 +1,7 @@
+"""Fixture: DEAD_STORE — `y` is overwritten before any read."""
+
+
+def f(x, expensive):
+    y = expensive(x)
+    y = x + 1
+    return y

@@ -1,0 +1,8 @@
+"""Fixture: clean twin of dead_store_bad — the first binding is read."""
+
+
+def f(x, expensive):
+    y = expensive(x)
+    total = y + 1
+    y = x + 1
+    return y + total

@@ -1,0 +1,9 @@
+"""Fixture: DEPRECATED_SURFACE — PR-7 shim usage in internal code."""
+
+
+def report(svc, det, DetectorService):
+    s = svc.stats()
+    energy = s["energy"]
+    tail = svc.stats()["tail"]
+    legacy = DetectorService(det, pods=3)
+    return energy, tail, legacy

@@ -1,0 +1,7 @@
+"""Fixture: clean twin — typed stats fields and config construction."""
+
+
+def report(svc, det, DetectorService, ServiceConfig):
+    stats = svc.stats()
+    svc2 = DetectorService(det, ServiceConfig(pods=3))
+    return stats.energy, stats.tail, svc2

@@ -1,0 +1,26 @@
+"""Fixture: JIT_CACHE — the three cache-defeating patterns."""
+
+from functools import partial
+
+import jax
+
+
+def sweep(fns, xs):
+    out = []
+    for g in fns:
+        jf = jax.jit(lambda v, _g=g: _g(v) + 1)   # pattern A: jit in loop
+        out.append(jf(xs))
+    return out
+
+
+def once(x):
+    return jax.jit(lambda v: v * 2)(x)            # pattern B: inline lambda
+
+
+@partial(jax.jit, static_argnames=("op",))
+def apply_op(x, op):
+    return op(x)
+
+
+def call(x):
+    return apply_op(x, op=lambda v: v + 1)        # pattern C: lambda static

@@ -1,0 +1,12 @@
+"""Fixture ops module: `alpha_sum` has no oracle twin (KERNEL_REF_TWIN);
+`beta_sum` has one but no test races the pair (KERNEL_REF_TEST)."""
+
+__all__ = ["alpha_sum", "beta_sum"]
+
+
+def alpha_sum(x):
+    return x.sum()
+
+
+def beta_sum(x):
+    return x.sum() * 2

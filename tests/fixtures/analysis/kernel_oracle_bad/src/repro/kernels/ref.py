@@ -1,0 +1,5 @@
+"""Fixture ref module: only beta_sum has a twin."""
+
+
+def beta_sum_ref(x):
+    return x.sum() * 2

@@ -1,0 +1,7 @@
+"""Fixture test: mentions beta_sum but never its oracle twin."""
+
+from repro.kernels.ops import beta_sum
+
+
+def test_beta(x):
+    assert beta_sum(x) is not None

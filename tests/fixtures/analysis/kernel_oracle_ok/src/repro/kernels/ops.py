@@ -1,0 +1,7 @@
+"""Fixture ops module: gamma_sum has a twin and a racing test — clean."""
+
+__all__ = ["gamma_sum"]
+
+
+def gamma_sum(x):
+    return x.sum() * 3

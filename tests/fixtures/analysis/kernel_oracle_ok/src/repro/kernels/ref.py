@@ -1,0 +1,5 @@
+"""Fixture ref module: gamma_sum's oracle twin."""
+
+
+def gamma_sum_ref(x):
+    return x.sum() * 3

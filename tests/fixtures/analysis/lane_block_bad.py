@@ -1,0 +1,3 @@
+"""Fixture: LANE_BLOCK — hardcoded (8, 128) tile outside kernels/+plan/."""
+
+TILE = (8, 128)

@@ -1,0 +1,5 @@
+"""Fixture: PLAN_GEOMETRY — hand-rolled IR construction outside plan/."""
+
+
+def build(n, SegmentPlan):
+    return SegmentPlan(spans=((0, n),), caps=(n,))

@@ -1,0 +1,3 @@
+"""Fixture: an unjustified suppression is itself a SUPPRESS finding."""
+
+TILE = (8, 128)  # repro: ignore[LANE_BLOCK]

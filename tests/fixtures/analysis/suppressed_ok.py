@@ -1,0 +1,3 @@
+"""Fixture: a justified suppression silences its finding."""
+
+TILE = (8, 128)  # repro: ignore[LANE_BLOCK] fixture: justified suppressions must be honoured

@@ -1,0 +1,11 @@
+"""Fixture: TAIL_BACKEND — backend literals outside the allowed set."""
+
+
+def run(stage_sums, cascade, ii):
+    return stage_sums(cascade, ii, backend="simd")
+
+
+def pick(tail_backend):
+    if tail_backend == "pallass":
+        return "pallas"
+    return tail_backend

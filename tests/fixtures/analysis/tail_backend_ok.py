@@ -1,0 +1,11 @@
+"""Fixture: clean twin — only allowed backend literals."""
+
+
+def run(stage_sums, cascade, ii):
+    return stage_sums(cascade, ii, backend="gather")
+
+
+def pick(tail_backend):
+    if tail_backend == "auto":
+        return "pallas"
+    return tail_backend

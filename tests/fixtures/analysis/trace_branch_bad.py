@@ -1,0 +1,10 @@
+"""Fixture: TRACE_BRANCH — host `if` on a traced argument."""
+
+import jax
+
+
+@jax.jit
+def f(x):
+    if x > 0:
+        return x
+    return -x

@@ -1,0 +1,15 @@
+"""Fixture: TRACE_BRANCH through a call — the helper branches on a value
+its jitted caller passes in traced."""
+
+import jax
+
+
+def clamp(v, lo):
+    if v < lo:
+        return lo
+    return v
+
+
+@jax.jit
+def f(x):
+    return clamp(x.sum(), 0.0)

@@ -1,0 +1,14 @@
+"""Fixture: TRACE_CONCRETE — float()/np.asarray() on traced values."""
+
+import jax
+import numpy as np
+
+
+def scale(v):
+    return float(v) * 2.0
+
+
+@jax.jit
+def f(x):
+    host = np.asarray(x)
+    return scale(x.sum()) + host.sum()

@@ -1,0 +1,119 @@
+"""repro.analysis: every rule catches its seeded fixture, clean twins stay
+clean, suppressions round-trip, the repo itself is clean, and the CLI
+surface (exit codes, --list-rules, --baseline) behaves."""
+
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import main, rule_ids, run_analysis
+
+FIX = Path(__file__).resolve().parent / "fixtures" / "analysis"
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run(*paths, select=None):
+    res = run_analysis([str(p) for p in paths], select=select)
+    return res, sorted({f.rule for f in res.findings})
+
+
+# ------------------------------------------------------------ per-rule
+@pytest.mark.parametrize("fixture,rule,n", [
+    ("dead_store_bad.py", "DEAD_STORE", 1),
+    ("trace_branch_bad.py", "TRACE_BRANCH", 1),
+    ("trace_branch_interproc_bad.py", "TRACE_BRANCH", 1),
+    ("trace_concrete_bad.py", "TRACE_CONCRETE", 2),
+    ("jit_cache_bad.py", "JIT_CACHE", 3),
+    ("tail_backend_bad.py", "TAIL_BACKEND", 2),
+    ("plan_geometry_bad.py", "PLAN_GEOMETRY", 1),
+    ("lane_block_bad.py", "LANE_BLOCK", 1),
+    ("deprecated_bad.py", "DEPRECATED_SURFACE", 3),
+])
+def test_rule_catches_seeded_fixture(fixture, rule, n):
+    res, rules = run(FIX / fixture, select=[rule])
+    assert rules == [rule]
+    assert len(res.findings) == n
+    for f in res.findings:
+        assert f.path.endswith(fixture) and f.line > 0 and f.col > 0
+        assert f.render()
+
+
+@pytest.mark.parametrize("fixture", [
+    "dead_store_ok.py", "trace_ok.py", "tail_backend_ok.py",
+    "deprecated_ok.py",
+])
+def test_clean_twin_stays_clean(fixture):
+    res, rules = run(FIX / fixture)
+    assert res.findings == [], rules
+
+
+def test_kernel_oracle_fixture_tree():
+    res, rules = run(FIX / "kernel_oracle_bad")
+    assert rules == ["KERNEL_REF_TEST", "KERNEL_REF_TWIN"]
+    msgs = " ".join(f.message for f in res.findings)
+    assert "alpha_sum_ref" in msgs       # missing twin
+    assert "beta_sum_ref" in msgs        # twin exists, never raced
+    res, rules = run(FIX / "kernel_oracle_ok")
+    assert res.findings == [], rules
+
+
+# --------------------------------------------------------- suppressions
+def test_justified_suppression_is_honoured():
+    res, _ = run(FIX / "suppressed_ok.py")
+    assert res.findings == []
+    assert [f.rule for f in res.suppressed] == ["LANE_BLOCK"]
+
+
+def test_unjustified_suppression_is_a_finding():
+    res, rules = run(FIX / "suppressed_bad.py")
+    # the LANE_BLOCK hit is suppressed, but the bare suppression itself
+    # surfaces as a SUPPRESS finding — silence always carries a reason
+    assert rules == ["SUPPRESS"]
+    assert [f.rule for f in res.suppressed] == ["LANE_BLOCK"]
+
+
+def test_unknown_rule_in_suppression_is_a_finding(tmp_path):
+    p = tmp_path / "snippet.py"
+    p.write_text("X = 1  # repro: ignore[NO_SUCH_RULE] because reasons\n")
+    res, rules = run(p)
+    assert rules == ["SUPPRESS"]
+    assert "NO_SUCH_RULE" in res.findings[0].message
+
+
+def test_suppression_inside_docstring_is_ignored(tmp_path):
+    p = tmp_path / "snippet.py"
+    p.write_text('"""docs quote `# repro: ignore[RULE]` verbatim."""\n')
+    res, _ = run(p)
+    assert res.findings == []
+
+
+# ------------------------------------------------------------ the repo
+def test_repo_is_clean_under_all_rules():
+    res = run_analysis([str(REPO / d) for d in
+                        ("src", "benchmarks", "scripts", "examples",
+                         "tests")])
+    assert res.findings == [], [f.render() for f in res.findings]
+    assert res.n_files > 100
+    # every suppression in the tree is exercised (none is stale)
+    assert res.suppressed, "expected the repo's justified suppressions"
+
+
+# ----------------------------------------------------------------- CLI
+def test_cli_exit_codes_and_baseline(tmp_path, capsys):
+    bad = str(FIX / "lane_block_bad.py")
+    assert main([bad]) == 1
+    assert main([str(FIX / "dead_store_ok.py")]) == 0
+    base = tmp_path / "baseline.json"
+    assert main([bad, "--write-baseline", str(base)]) == 0
+    assert main([bad, "--baseline", str(base)]) == 0
+    assert main([bad, "--select", "NOPE"]) == 2
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "TRACE_BRANCH" in out and "KERNEL_REF_TWIN" in out
+
+
+def test_registry_covers_documented_rules():
+    assert set(rule_ids()) >= {
+        "TRACE_BRANCH", "TRACE_CONCRETE", "JIT_CACHE", "TAIL_BACKEND",
+        "PLAN_GEOMETRY", "LANE_BLOCK", "KERNEL_REF_TWIN",
+        "KERNEL_REF_TEST", "DEPRECATED_SURFACE", "DEAD_STORE"}

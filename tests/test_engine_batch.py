@@ -137,6 +137,7 @@ def test_capacity_fracs_out_of_range_raises(bad):
 
 def test_unknown_tail_backend_raises():
     with pytest.raises(ValueError, match="tail_backend"):
+        # repro: ignore[TAIL_BACKEND] negative test: exercises the unknown-backend rejection path
         Detector(CASC, EngineConfig(tail_backend="simd"))
 
 

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import ops
+from repro.kernels import ops, ref
 from repro.core.integral import integral_images
 from repro.core import load_cascade
 from repro.configs.viola_jones import DEFAULT_PRETRAINED
@@ -134,3 +134,49 @@ def test_dense_stage_sums_batch_all_stages_match_ref(stage):
         one = ops.dense_stage_sums(CASC, CASC, stage, ii[i], inv[i],
                                    interpret=True)
         np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(one))
+
+
+# ---------------------------------------------------------------- oracles
+# Direct kernel-vs-oracle races (repro.analysis KERNEL_REF_TEST contract:
+# every public kernel must be checked against its *_ref twin by name, not
+# only through the use_kernel=False convenience path).
+
+def test_integral_image_vs_oracle_twin():
+    rng = np.random.default_rng(7)
+    img = jnp.asarray(rng.integers(0, 255, (48, 72)).astype(np.float32))
+    got = ops.integral_image(img, interpret=True, use_kernel=True)
+    want = jnp.pad(ref.integral_image_ref(img), ((1, 0), (1, 0)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-2)
+
+
+def test_integral_image_batch_vs_oracle_twin():
+    rng = np.random.default_rng(11)
+    imgs = jnp.asarray(rng.integers(0, 255, (3, 40, 56)).astype(np.float32))
+    got = ops.integral_image_batch(imgs, interpret=True, use_kernel=True)
+    want = jnp.pad(ref.integral_image_batch_ref(imgs),
+                   ((0, 0), (1, 0), (1, 0)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-2)
+
+
+def test_window_inv_sigma_grid_vs_oracle_twin():
+    rng = np.random.default_rng(13)
+    img = jnp.asarray(rng.integers(0, 255, (52, 68)).astype(np.float32))
+    _, ii_pair = integral_images(img)
+    ny, nx = 52 - 24 + 1, 68 - 24 + 1
+    got = ops.window_inv_sigma_grid(ii_pair, ny, nx, use_kernel=True)
+    want = ref.window_inv_sigma_grid_ref(ii_pair, ny, nx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_window_inv_sigma_grid_batch_vs_oracle_twin():
+    rng = np.random.default_rng(17)
+    imgs = rng.integers(0, 255, (2, 44, 60)).astype(np.float32)
+    pairs = jnp.stack([integral_images(jnp.asarray(im))[1] for im in imgs])
+    ny, nx = 44 - 24 + 1, 60 - 24 + 1
+    got = ops.window_inv_sigma_grid_batch(pairs, ny, nx, use_kernel=True)
+    want = ref.window_inv_sigma_grid_batch_ref(pairs, ny, nx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)

@@ -102,6 +102,7 @@ def test_stage_run_rows_equal_per_stage_calls():
 
 def test_unknown_backend_raises():
     with pytest.raises(ValueError, match="unknown packed-tail backend"):
+        # repro: ignore[TAIL_BACKEND] negative test: exercises the unknown-backend rejection path
         packed_tail.stage_sums(CASC, CASC, 0, 1, *WORKLOAD, backend="nope")
 
 

@@ -246,6 +246,7 @@ def test_validate_config_through_plan():
     with pytest.raises(ValueError, match="compaction"):
         Detector(CASC, CFG._replace(capacity_fracs=(0.5, 0.5, 0.5, 0.5)))
     with pytest.raises(ValueError, match="tail_backend"):
+        # repro: ignore[TAIL_BACKEND] negative test: exercises the unknown-backend rejection path
         Detector(CASC, CFG._replace(tail_backend="nope"))
     with pytest.raises(ValueError, match=r"\(0, 1\]"):
         n_comp = planlib.n_compactions(planlib.segment_spans(N_STAGES, CFG))
