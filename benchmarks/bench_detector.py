@@ -74,23 +74,32 @@ def run(n_images: int = 5, hw: int = 128, fast: bool = False) -> list[dict]:
                  "precision": "-", "recall": "-",
                  "wall_s": seq_s / max(bat_s, 1e-9)})
 
-    # ---- kernelized dense-wave head (use_pallas): oracle-vs-kernel wall
-    # time plus the head (SAT + inv-sigma + dense waves) vs tail (packed
-    # compaction stages) split of the packed batched engine
-    for use_pallas, label in ((False, "oracle"), (True, "pallas")):
-        dp = det if not use_pallas else \
-            Detector(det.cascade, det.config._replace(use_pallas=True))
+    # ---- kernelized dense-wave head (use_pallas, split vs fused): oracle
+    # vs kernel wall time plus the head (SAT + inv-sigma + dense waves) vs
+    # tail (packed compaction stages) split of the packed batched engine.
+    # Head and tail are *measured directly* — the engine's batch program
+    # is timed half by half (Detector.batch_parts), not by subtracting the
+    # head from the whole flush (which under-measured the head and went
+    # negative on the tail whenever the full flush ran faster).
+    variants = [("oracle", det)]
+    for hm in ("split", "fused"):
+        variants.append((f"pallas-{hm}", Detector(
+            det.cascade, det.config._replace(use_pallas=True,
+                                             head_mode=hm))))
+    for label, dp in variants:
         out = dp.detect_batch(imgs, strategy="packed")      # warm + check
         same = all(np.array_equal(s, b) for s, b in zip(batched, out))
         with Timer() as t:
             dp.detect_batch(imgs, strategy="packed")
         full_s = t.seconds
-        head_s = _time_batched_head(dp, imgs)
+        head_s, tail_s = _time_batched_head_tail(dp, imgs)
         rows.append({
             "system": (f"batched {label} head B=8 (identical={same}) "
-                       f"head_s={head_s:.3f} tail_s={full_s - head_s:.3f}"),
+                       f"head_s={head_s:.3f} tail_s={tail_s:.3f}"),
             "TP": "-", "FP": "-", "FN": "-", "total_error": "-",
-            "precision": "-", "recall": "-", "wall_s": full_s})
+            "precision": "-", "recall": "-", "wall_s": full_s,
+            "head_mode": label, "head_s": head_s, "tail_s": tail_s,
+            "identical": same})
 
     # plan-cache probe: a repeated same-bucket flush must compile nothing.
     # The counters land in BENCH_detector.json so plan-cache regressions
@@ -173,65 +182,30 @@ def _crossover_rows(casc, scenes, imgs, fast: bool) -> list[dict]:
     return rows
 
 
-def _time_batched_head(det, imgs) -> float:
-    """Wall time of the batched engine's *head* alone: per-level SAT +
-    inv-sigma + the dense stage waves over the whole stack, built from the
-    same ops the packed program runs (kernelized when ``use_pallas``)."""
+def _time_batched_head_tail(det, imgs) -> tuple[float, float]:
+    """Wall time of the batched engine's head and tail, each measured
+    directly: the *actual* packed batch program's two halves
+    (:meth:`Detector.batch_parts`) are jitted and timed separately, so
+    ``head_s + tail_s`` need not equal the fused full-flush time and the
+    tail can never come out negative."""
     import jax
     import jax.numpy as jnp
-    from repro.core.cascade import WINDOW
-    from repro.core.integral import integral_images, window_inv_sigma
-    from repro.core.features import stage_sum_windows
-    from repro.core.pyramid import pyramid_plan, downscale_indices
-    from repro.kernels import ops as kops
 
-    cfg = det.config
     h, w = imgs[0].shape
-    plan = pyramid_plan(h, w, cfg.scale_factor)
-    n_dense = det._dense_prefix()
-    bounds = det.stage_bounds
-    cascade_static = det.cascade
-    use_pallas = cfg.use_pallas and cfg.step == 1
-
-    def head_fn(cascade, stack):
-        outs = []
-        for lv in plan:
-            ys_idx = downscale_indices(h, lv.height)
-            xs_idx = downscale_indices(w, lv.width)
-            img_l = stack[:, ys_idx[:, None], xs_idx[None, :]]
-            ny = (lv.height - WINDOW) // cfg.step + 1
-            nx = (lv.width - WINDOW) // cfg.step + 1
-            gy = jnp.arange(ny, dtype=jnp.int32) * cfg.step
-            gx = jnp.arange(nx, dtype=jnp.int32) * cfg.step
-
-            def one(img):
-                ii, pair = integral_images(img)
-                inv = window_inv_sigma(pair, gy[:, None], gx[None, :],
-                                       WINDOW)
-                return ii, inv
-
-            ii_l, inv_l = jax.vmap(one)(img_l)
-            ys_w = jnp.repeat(gy, nx)
-            xs_w = jnp.tile(gx, ny)
-            for s in range(n_dense):
-                if use_pallas:
-                    ss = kops.dense_stage_sums_batch(
-                        cascade, cascade_static, s, ii_l, inv_l,
-                        interpret=cfg.interpret)
-                else:
-                    k0, k1 = bounds[s], bounds[s + 1]
-                    ss = jax.vmap(lambda ii_b, inv_b: stage_sum_windows(
-                        cascade, ii_b, ys_w, xs_w, inv_b.reshape(-1),
-                        k0, k1))(ii_l, inv_l)
-                outs.append(ss.sum())
-        return jnp.stack(outs).sum()
-
-    fn = jax.jit(head_fn)
-    stack = jnp.asarray(np.stack(imgs))
-    fn(det.cascade, stack).block_until_ready()       # compile
+    hp, wp = det._bucket_hw(h, w)
+    head_fn, tail_fn = det.batch_parts(hp, wp, len(imgs))
+    stack, valid_hw = det._pack_stack(imgs, hp, wp)
+    valid_hw = jnp.asarray(valid_hw)
+    head = jax.jit(head_fn)
+    tail = jax.jit(tail_fn)
+    state = jax.block_until_ready(head(det.cascade, stack, valid_hw))
+    jax.block_until_ready(tail(det.cascade, *state))     # compile both
     with Timer() as t:
-        fn(det.cascade, stack).block_until_ready()
-    return t.seconds
+        jax.block_until_ready(head(det.cascade, stack, valid_hw))
+    head_s = t.seconds
+    with Timer() as t:
+        jax.block_until_ready(tail(det.cascade, *state))
+    return head_s, t.seconds
 
 
 def main(fast: bool = False):

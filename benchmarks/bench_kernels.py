@@ -48,6 +48,69 @@ def run(fast: bool = False) -> list[dict]:
         rows.append({"kernel": "haar_stage_sums", "shape": f"{ny}x{nx}",
                      "max_err": err, "ok": err < 1e-2,
                      "ref_us": None})
+    rows.extend(_fused_head_rows(casc, rng, fast))
+    return rows
+
+
+def _fused_head_rows(casc, rng, fast: bool) -> list[dict]:
+    """Fused Haar-head megakernel vs the split three-dispatch path, per
+    pyramid level of a dense workload: bit-exactness under jit (the
+    engine's contract — both paths are jitted there) plus the autotuner's
+    own split/fused timings and the mode its crossover ladder chose."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.cascade import WINDOW
+    from repro.core.integral import integral_images, window_inv_sigma
+    from repro.core.pyramid import pyramid_plan, downscale_indices
+    from repro.kernels import ops
+    from repro.kernels import autotune as ktune
+
+    h0 = 64 if fast else 96
+    base = jnp.asarray(rng.integers(0, 255, (h0, h0)).astype(np.float32))
+    workload = []
+    for lv in pyramid_plan(h0, h0, 1.3):
+        ys = downscale_indices(h0, lv.height)
+        xs = downscale_indices(h0, lv.width)
+        workload.append((base[ys[:, None], xs[None, :]], 1.0))
+    n_dense = min(3, casc.n_stages)
+    head = ktune.measure_head(casc, workload, n_dense=n_dense,
+                              repeats=1, inner=2 if fast else 3)
+
+    def split_head(c, im):
+        ii, pair = integral_images(im)
+        h, w = im.shape
+        ny, nx = h - WINDOW + 1, w - WINDOW + 1
+        inv = window_inv_sigma(pair, jnp.arange(ny)[:, None],
+                               jnp.arange(nx)[None, :], WINDOW)
+        sums = jnp.stack([ops.dense_stage_sums(c, casc, s, ii, inv)
+                          for s in range(n_dense)])
+        return ii, inv, sums
+
+    # jitted once; jax retraces per level shape — same cache discipline
+    # as the engine, and what the bit-exactness contract is stated over
+    split_fn = jax.jit(split_head)
+    fused_fn = jax.jit(lambda c, im: ops.fused_head(c, casc, 0, n_dense,
+                                                    im))
+    rows = []
+    for i, (h, w, nwin) in enumerate(head["levels"]):
+        img_l = workload[i][0]
+        want = split_fn(casc, img_l)
+        got = fused_fn(casc, img_l)
+        err = max(float(jnp.max(jnp.abs(g - wn)))
+                  for g, wn in zip(got, want))
+        bit = all(bool(jnp.all(g == wn)) for g, wn in zip(got, want))
+        s_ms, f_ms = head["ms"]["split"][i], head["ms"]["fused"][i]
+        rows.append({"kernel": "fused_head", "shape": f"{h}x{w}",
+                     "max_err": err, "ok": bit, "ref_us": s_ms * 1e3,
+                     "bit_exact": bit, "split_ms": s_ms, "fused_ms": f_ms,
+                     "n_windows": nwin,
+                     "mode": "fused" if f_ms <= s_ms else "split"})
+    ty, tx = head["head_tiles"]
+    rows.append({"kernel": "fused_head_autotune", "shape": f"{ty}x{tx}",
+                 "max_err": 0.0, "ok": True, "ref_us": None,
+                 "head_tiles": list(head["head_tiles"]),
+                 "crossover": head["crossover"],
+                 "rungs": [list(r) for r in head["rungs"]]})
     return rows
 
 

@@ -26,7 +26,32 @@ python scripts/crossover_smoke.py
 echo "=== smoke: plan layer (ladder-chosen backends bit-exact, stats reflect plan) ==="
 python scripts/plan_smoke.py
 
-echo "=== smoke: bench_detector (batched head + packed-tail crossover, fast) ==="
+echo "=== smoke: bench_kernels (fused head vs split, bit-exact + crossover) ==="
+python -m benchmarks.run --fast --only bench_kernels --artifacts .
+python - <<'EOF'
+# The fused Haar-head megakernel must be bit-exact against the split
+# three-dispatch path at every pyramid level of the dense workload, and
+# wherever the autotuner's crossover chose "fused" the fused timing must
+# actually be at least as fast as split (1.25x timing-noise tolerance).
+import json
+
+rows = json.load(open("BENCH_kernels.json"))["rows"]
+fused = [r for r in rows if r.get("kernel") == "fused_head"]
+assert fused, "no fused_head rows in BENCH_kernels.json"
+assert all(r["bit_exact"] for r in fused), \
+    "fused head not bit-exact vs the split path"
+chosen = [r for r in fused if r["mode"] == "fused"]
+for r in chosen:
+    assert r["fused_ms"] <= r["split_ms"] * 1.25, \
+        f"tuner chose fused at {r['shape']} but fused is slower " \
+        f"({r['fused_ms']:.2f}ms vs {r['split_ms']:.2f}ms)"
+tuned = next(r for r in rows if r.get("kernel") == "fused_head_autotune")
+print(f"fused head OK: bit-exact at {len(fused)} level(s), fused wins "
+      f"{len(chosen)}/{len(fused)}, tile={tuned['shape']}, "
+      f"crossover={tuned['crossover']}")
+EOF
+
+echo "=== smoke: bench_detector (batched head/tail split + crossover, fast) ==="
 python -m benchmarks.run --fast --only bench_detector --artifacts .
 
 echo "=== smoke: bench_rit (content/RIT relation, fast) ==="

@@ -21,7 +21,8 @@ TAIL_BACKEND        packed-tail backend string literals not in the
 PLAN_GEOMETRY       hand-rolled plan-IR construction (``SegmentPlan``,
                     ``SlotLayout``, ...) outside ``src/repro/plan/``
 LANE_BLOCK          hardcoded ``(8, 128)`` lane-block/tile literals
-                    outside ``kernels/`` + ``plan/``
+                    outside ``kernels/autotune.py`` (the single home of
+                    ``DEFAULT_TILE`` + the tuner's candidate tables)
 KERNEL_REF_TWIN     public kernel entry point without a ``*_ref`` oracle
                     twin in ``kernels/ref.py`` / ``kernels/ops.py``
 KERNEL_REF_TEST     kernel/oracle pair never exercised together by any

@@ -108,6 +108,20 @@ class EngineConfig(NamedTuple):
     #                                Detector.calibrated(tune_tail=True) so
     #                                batch, stream and serving inherit one
     #                                decision
+    head_mode: str = "auto"        # dense-head execution: 'fused' one-dispatch
+    #                                megakernel | 'split' three-dispatch path
+    #                                forces one; 'auto' walks the calibrated
+    #                                head_rungs ladder (empty ladder = fused;
+    #                                non-Pallas / strided configs always split)
+    head_rungs: tuple = ()         # measured fused-vs-split crossover ladder
+    #                                ((max_windows, mode), ...) ascending,
+    #                                persisted by calibrated(tune_head=True)
+    head_tile: tuple = ()          # autotuned dense-head tile shape (ty, tx);
+    #                                () = the package default — winners from
+    #                                kernels.autotune.measure_head persist here
+    lane_block: tuple = ()         # autotuned packed-tail lane-block shape;
+    #                                () = default — winners from
+    #                                kernels.autotune.measure_lane_block
 
 
 class LevelResult(NamedTuple):
@@ -166,6 +180,8 @@ class Detector:
         self._level_fns: dict = {}       # level-plan key -> jitted level fn
         self._vmap_level_fns: dict = {}  # (key, B) -> jit(vmap(level fn))
         self._batch_fns: dict = {}       # batch-plan key -> packed batch fn
+        self._batch_heads: dict = {}     # batch-plan key -> unjitted head fn
+        self._batch_tails: dict = {}     # batch-plan key -> unjitted tail fn
 
     # ---------------------------------------------------------------- plan
     def _segments(self) -> list[tuple[int, int, bool]]:
@@ -198,18 +214,32 @@ class Detector:
         bounds = self.stage_bounds
         cascade_static = self.cascade  # static feature geometry for Pallas
 
-        if cfg.use_pallas:
+        n_dense_lp = sum(seg.s1 - seg.s0 for seg in segs if seg.dense)
+        fused = lp.head_mode == "fused" and n_dense_lp > 0
+        head_tile = lp.head_tile
+        if cfg.use_pallas or fused:
             from repro.kernels import ops as kops
+            if not head_tile:
+                from repro.kernels.autotune import DEFAULT_TILE as head_tile
 
         def level_fn(cascade: Cascade, img: jax.Array,
                      limits: jax.Array) -> LevelResult:
-            ii, ii_pair = integral_images(img)
+            if fused:
+                # whole dense head — SAT + 1/sigma + every dense stage's
+                # sums — in one megakernel dispatch (bit-identical to the
+                # split path below; the plan chose per measured crossover)
+                ii, inv_sigma_grid, dsums = kops.fused_head(
+                    cascade, cascade_static, 0, n_dense_lp, img,
+                    tile=head_tile, interpret=cfg.interpret)
+            else:
+                ii, ii_pair = integral_images(img)
             gy = jnp.arange(ny, dtype=jnp.int32) * step
             gx = jnp.arange(nx, dtype=jnp.int32) * step
             ys = jnp.repeat(gy, nx)
             xs = jnp.tile(gx, ny)
-            inv_sigma_grid = window_inv_sigma(
-                ii_pair, gy[:, None], gx[None, :], WINDOW)      # (ny, nx)
+            if not fused:
+                inv_sigma_grid = window_inv_sigma(
+                    ii_pair, gy[:, None], gx[None, :], WINDOW)  # (ny, nx)
             inv_sigma = inv_sigma_grid.reshape(-1)
 
             # dense-grid liveness; ``limits`` masks windows whose receptive
@@ -227,9 +257,12 @@ class Detector:
                 if dense:
                     for s in range(s0, s1):
                         k0, k1 = bounds[s], bounds[s + 1]
-                        if cfg.use_pallas and step == 1:
+                        if fused:
+                            ss = dsums[s].reshape(-1)
+                        elif cfg.use_pallas and step == 1:
                             ss = kops.dense_stage_sums(
                                 cascade, cascade_static, s, ii, inv_sigma_grid,
+                                tile=head_tile,
                                 interpret=cfg.interpret).reshape(-1)
                         else:
                             ss = stage_sum_windows(cascade, ii, ys, xs,
@@ -384,8 +417,12 @@ class Detector:
         cascade_static = self.cascade  # static feature geometry for Pallas
         use_pallas = cfg.use_pallas and step == 1
         self.program_builds += 1
+        head_tile = plan.head_tile
+        lane_block = plan.lane_block
         if use_pallas:
             from repro.kernels import ops as kops
+            if not head_tile:
+                from repro.kernels.autotune import DEFAULT_TILE as head_tile
 
         layout = plan.layout
         lvl_of_slot = jnp.asarray(layout.lvl_of_slot)
@@ -397,20 +434,21 @@ class Detector:
         cap0 = plan.capacities[0]
         tail_segs = plan.tail_segments
 
-        def batch_fn(cascade: Cascade, stack: jax.Array,
-                     valid_hw: jax.Array) -> BatchResult:
+        def head_fn(cascade: Cascade, stack: jax.Array,
+                    valid_hw: jax.Array):
             # stack: (B, hp, wp) f32; valid_hw: (B, 2) int32 true shapes
             counts = jnp.zeros((n_stages, batch), jnp.int32)
             # per-level SATs, flattened per level and concatenated, feed the
             # packed tail's gathers; dense mode (no tail) never builds them
             sat_parts: list = []
             alive_parts, inv_parts = [], []
-            for lp in plan.levels:
+            for li, lp in enumerate(plan.levels):
                 ys_idx = downscale_indices(hp, lp.height)
                 xs_idx = downscale_indices(wp, lp.width)
                 img_l = stack[:, ys_idx[:, None], xs_idx[None, :]]
                 gy = np.arange(lp.ny, dtype=np.int32) * step
                 gx = np.arange(lp.nx, dtype=np.int32) * step
+                fused_l = plan.head_modes[li] == "fused" and n_dense > 0
 
                 def head(img, gy=gy, gx=gx):
                     ii, ii_pair = integral_images(img)
@@ -419,7 +457,16 @@ class Detector:
                         jnp.asarray(gx)[None, :], WINDOW)
                     return ii, inv                            # (ny, nx) grid
 
-                ii_l, inv_grid_l = jax.vmap(head)(img_l)   # (B,h+1,w+1),(B,ny,nx)
+                if fused_l:
+                    # SAT + 1/sigma + every dense stage's sums for the whole
+                    # stack in one batched megakernel dispatch (bit-identical
+                    # to the split path; the plan chose per level from the
+                    # measured fused-vs-split crossover)
+                    ii_l, inv_grid_l, sums_l = kops.fused_head_batch(
+                        cascade, cascade_static, 0, n_dense, img_l,
+                        tile=head_tile, interpret=cfg.interpret)
+                else:
+                    ii_l, inv_grid_l = jax.vmap(head)(img_l)  # (B,h+1,w+1),(B,ny,nx)
                 inv_l = inv_grid_l.reshape(batch, -1)
                 if tail_segs:
                     sat_parts.append(ii_l.reshape(batch, -1))
@@ -433,12 +480,15 @@ class Detector:
                            & (xs_w[None, :] <= x_lim[:, None]))  # (B, n)
                 for s in range(n_dense):
                     k0, k1 = bounds[s], bounds[s + 1]
-                    if use_pallas:
+                    if fused_l:
+                        ss = sums_l[:, s].reshape(batch, -1)
+                    elif use_pallas:
                         # dense waves through the Pallas tile kernel, one
                         # dispatch per (stage, level) over the whole stack —
                         # same kernel the single-image level_fn runs
                         ss = kops.dense_stage_sums_batch(
                             cascade, cascade_static, s, ii_l, inv_grid_l,
+                            tile=head_tile,
                             interpret=cfg.interpret).reshape(batch, -1)
                     else:
                         ss = jax.vmap(
@@ -451,13 +501,17 @@ class Detector:
                 alive_parts.append(alive_l)
                 inv_parts.append(inv_l)
 
-            # ---- shared compactions across the whole (batch x pyramid):
-            # survivors from every image and level share one window list,
-            # recompacted per tail segment like the single-image wave engine
             alive_flat = jnp.concatenate(alive_parts, axis=1).reshape(-1)
             inv_flat = jnp.concatenate(inv_parts, axis=1).reshape(-1)
             ii_flat = (jnp.concatenate(sat_parts, axis=1) if tail_segs
                        else None)                         # (B, sum sat sizes)
+            return alive_flat, inv_flat, ii_flat, counts
+
+        def tail_fn(cascade: Cascade, alive_flat: jax.Array,
+                    inv_flat: jax.Array, ii_flat, counts) -> BatchResult:
+            # ---- shared compactions across the whole (batch x pyramid):
+            # survivors from every image and level share one window list,
+            # recompacted per tail segment like the single-image wave engine
             overflow = alive_flat.sum() > cap0
             idx = jnp.nonzero(alive_flat, size=cap0, fill_value=-1)[0]
             sel = jnp.maximum(idx, 0)
@@ -489,7 +543,8 @@ class Detector:
                 ss_run = packed_tail.stage_sums(
                     cascade, cascade_static, s0, s1, ii_flat, b_sel,
                     base_sel, stride_sel, y_sel, x_sel, inv_sel,
-                    backend=seg.backend, interpret=cfg.interpret)
+                    backend=seg.backend, tile=lane_block,
+                    interpret=cfg.interpret)
                 for j, s in enumerate(range(s0, s1)):
                     valid = valid & (ss_run[j] >= cascade.stage_threshold[s])
                     per_img = jnp.zeros((batch,), jnp.int32).at[b_sel].add(
@@ -503,6 +558,12 @@ class Detector:
                 xs=jnp.where(valid, x_sel, -1),
                 valid=valid, alive_counts=counts, overflow=overflow)
 
+        def batch_fn(cascade: Cascade, stack: jax.Array,
+                     valid_hw: jax.Array) -> BatchResult:
+            return tail_fn(cascade, *head_fn(cascade, stack, valid_hw))
+
+        self._batch_heads[plan.key] = head_fn
+        self._batch_tails[plan.key] = tail_fn
         return jax.jit(batch_fn)
 
     def _batch_fn(self, hp: int, wp: int, batch: int):
@@ -510,6 +571,21 @@ class Detector:
         if plan.key not in self._batch_fns:
             self._batch_fns[plan.key] = self._build_batch_fn(plan)
         return self._batch_fns[plan.key]
+
+    def batch_parts(self, hp: int, wp: int, batch: int):
+        """The packed batch program's (head_fn, tail_fn) halves, unjitted.
+
+        ``head_fn(cascade, stack, valid_hw)`` runs the per-level dense
+        waves and returns the flat pre-compaction state
+        ``(alive_flat, inv_flat, ii_flat, counts)``; ``tail_fn(cascade,
+        *that)`` runs the shared compactions + packed tail to a
+        :class:`BatchResult`.  Benchmarks jit and time the halves
+        directly, so the head/tail split in BENCH_detector is a pair of
+        real measurements rather than a subtraction.
+        """
+        self._batch_fn(hp, wp, batch)    # ensure built (and plan-cached)
+        key = self.batch_plan(hp, wp, batch).key
+        return self._batch_heads[key], self._batch_tails[key]
 
     @staticmethod
     def _pack_stack(imgs: list, hp: int, wp: int):
@@ -629,7 +705,8 @@ class Detector:
     # ---------------------------------------------------------- calibration
     def calibrated(self, image, safety: float = 2.0,
                    tune_tail: bool = False,
-                   tail_sizes: tuple | None = None) -> "Detector":
+                   tail_sizes: tuple | None = None,
+                   tune_head: bool = False) -> "Detector":
         """Profile-guided detector: run once on ``image`` with the current
         (conservative) capacities, measure survivors at each compaction
         boundary, and return a new :class:`Detector` whose
@@ -646,9 +723,20 @@ class Detector:
         density — and the winners persisted in ``EngineConfig.tail_rungs``,
         so every consumer of the config — batched detection, the streaming
         engine's rung-sized programs, and the serving layer — inherits the
-        measured kernel-vs-gather crossover.  The returned detector's
-        ``cal_profile`` records the per-compaction survivor densities
-        (overall and per level) and the timing sweep for benchmarks."""
+        measured kernel-vs-gather crossover.
+
+        With ``tune_head=True`` the dense *head* is autotuned on the same
+        workload (``kernels.autotune``): fused megakernel vs split
+        three-dispatch path raced per pyramid level (winners persisted as
+        the ``EngineConfig.head_rungs`` ladder + ``head_mode="auto"``),
+        head tile shapes raced (winner in ``head_tile``), and packed-tail
+        lane-block shapes raced (winner in ``lane_block``).  The plan
+        compiler is the single consumer of all of it — re-running
+        ``calibrated(tune_tail=True, tune_head=True)`` on hardware is a
+        full re-measurement.  The returned detector's ``cal_profile``
+        records the per-compaction survivor densities (overall and per
+        level), the tuned shapes (``head_tiles`` / ``lane_block`` next to
+        ``tail_rungs``), and the timing sweeps for benchmarks."""
         image = np.asarray(image, np.float32)
         h, w = image.shape
         hp, wp = self._bucket_hw(h, w)
@@ -683,8 +771,7 @@ class Detector:
             "levels": [(lp.height, lp.width, lp.n_windows)
                        for lp in bplan.levels],
         }
-        if tune_tail:
-            kw = {} if tail_sizes is None else {"sizes": tuple(tail_sizes)}
+        if tune_tail or tune_head:
             # real workload: the profiled image at every pyramid level of
             # the plan, each level weighted by its expected packed-window
             # share (density * window count) — closes the synthetic
@@ -698,11 +785,34 @@ class Detector:
                                               lp.width)),
                  d * lp.n_windows)
                 for lp, d in zip(bplan.levels, level_density)]
+        if tune_tail:
+            kw = {} if tail_sizes is None else {"sizes": tuple(tail_sizes)}
             tail = packed_tail.measure_rungs(
                 self.cascade, interpret=self.config.interpret,
                 workload=workload, **kw)
             cfg = cfg._replace(tail_backend="auto", tail_rungs=tail["rungs"])
             profile["tail"] = tail
+        if tune_head:
+            from repro.kernels import autotune as kernels_autotune
+            n_dense = bplan.dense_prefix
+            if n_dense > 0:
+                head = kernels_autotune.measure_head(
+                    self.cascade, workload, n_dense=n_dense,
+                    interpret=self.config.interpret)
+                cfg = cfg._replace(head_mode="auto",
+                                   head_rungs=head["rungs"],
+                                   head_tile=head["head_tiles"])
+                profile["head"] = head
+                profile["head_tiles"] = head["head_tiles"]
+            lane_size = (profile["tail"]["crossover"]
+                         if tune_tail and profile["tail"]["crossover"] > 0
+                         else 2048)
+            lane = kernels_autotune.measure_lane_block(
+                self.cascade, workload, size=lane_size,
+                interpret=self.config.interpret)
+            cfg = cfg._replace(lane_block=lane["lane_block"])
+            profile["lane"] = lane
+            profile["lane_block"] = lane["lane_block"]
         det = Detector(self.cascade, cfg)
         det.cal_profile = profile
         return det

@@ -33,7 +33,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.cascade import WINDOW
 
-DEFAULT_TILE = (8, 128)
+from .autotune import DEFAULT_TILE
+
 _INV_AREA = 1.0 / float(WINDOW * WINDOW)
 
 

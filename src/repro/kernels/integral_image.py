@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-DEFAULT_TILE = (8, 128)
+from .autotune import DEFAULT_TILE
 
 
 def _row_scan_kernel(x_ref, o_ref, carry_ref):

@@ -16,15 +16,19 @@ import jax.numpy as jnp
 
 from repro.core.cascade import Cascade, WINDOW
 from . import ref
-from .integral_image import integral_image_kernel, DEFAULT_TILE
+from .autotune import DEFAULT_TILE
+from .integral_image import integral_image_kernel
 from .haar_stage import haar_stage_sums_kernel
 from .window_variance import window_inv_sigma_kernel
 from .packed_window import packed_stage_sums_kernel
+from .fused_head import fused_head_kernel
 
 __all__ = ["integral_image", "window_inv_sigma_grid", "dense_stage_sums",
            "integral_image_batch", "window_inv_sigma_grid_batch",
            "dense_stage_sums_batch", "dense_stage_sums_batch_ref",
-           "packed_stage_sums", "packed_stage_sums_ref"]
+           "packed_stage_sums", "packed_stage_sums_ref",
+           "fused_head", "fused_head_ref",
+           "fused_head_batch", "fused_head_batch_ref"]
 
 
 def _pad_to(x: jax.Array, mh: int, mw: int, mode: str = "edge") -> jax.Array:
@@ -188,6 +192,65 @@ def dense_stage_sums_batch(cascade: Cascade, cascade_static: Cascade, s: int,
         cascade.right_val[k0:k1], ii_b, inv_b, tile=tile,
         interpret=interpret))(iip, invp)
     return out[:, :ny, :nx]
+
+
+# -------------------------------------------------------------------- fused
+# One-dispatch dense head: SAT + 1/sigma + every dense stage's vote sums
+# from a single fused_head_kernel call (kernels/fused_head.py), with the
+# intermediates resident in VMEM.  Bit-identical to the split three-dispatch
+# path (integral_images -> window_inv_sigma -> dense_stage_sums per stage),
+# which is what Detector executes when the plan's head mode is "split".
+
+def fused_head(cascade: Cascade, cascade_static: Cascade, s0: int, s1: int,
+               img: jax.Array, *, tile=DEFAULT_TILE,
+               interpret: bool = True):
+    """Fused dense head for stages ``[s0, s1)`` over one image.
+
+    Returns ``(ii, inv_sigma_grid, stage_sums)``: the (H+1, W+1) padded
+    SAT (feeds the compacted tail's gathers), the (ny, nx) 1/sigma grid,
+    and (s1 - s0, ny, nx) per-stage vote sums — each bit-identical to the
+    split path's corresponding array.
+    """
+    k0, k1, rel = _stage_run_slices(cascade_static, s0, s1)
+    return fused_head_kernel(
+        cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
+        cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
+        cascade.right_val[k0:k1], rel, img, tile=tile, interpret=interpret)
+
+
+def fused_head_ref(cascade: Cascade, cascade_static: Cascade, s0: int,
+                   s1: int, img: jax.Array):
+    """Oracle twin of :func:`fused_head` (same signature contract)."""
+    k0, k1, rel = _stage_run_slices(cascade_static, s0, s1)
+    return ref.fused_head_ref(
+        cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
+        cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
+        cascade.right_val[k0:k1], rel, img)
+
+
+def fused_head_batch(cascade: Cascade, cascade_static: Cascade, s0: int,
+                     s1: int, imgs: jax.Array, *, tile=DEFAULT_TILE,
+                     interpret: bool = True):
+    """(B, H, W) stack -> batched :func:`fused_head` (same per-image
+    contract): ``(B, H+1, W+1)`` SATs, ``(B, ny, nx)`` 1/sigma grids,
+    ``(B, s1-s0, ny, nx)`` stage sums.  vmap lifts the batch axis into an
+    extra Pallas grid dimension, so one dispatch covers the stack."""
+    k0, k1, rel = _stage_run_slices(cascade_static, s0, s1)
+    return jax.vmap(lambda im: fused_head_kernel(
+        cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
+        cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
+        cascade.right_val[k0:k1], rel, im, tile=tile,
+        interpret=interpret))(imgs.astype(jnp.float32))
+
+
+def fused_head_batch_ref(cascade: Cascade, cascade_static: Cascade, s0: int,
+                         s1: int, imgs: jax.Array):
+    """Oracle twin of :func:`fused_head_batch` (same signature contract)."""
+    k0, k1, rel = _stage_run_slices(cascade_static, s0, s1)
+    return ref.fused_head_batch_ref(
+        cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
+        cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
+        cascade.right_val[k0:k1], rel, imgs)
 
 
 # ------------------------------------------------------------------- packed

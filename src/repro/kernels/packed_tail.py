@@ -137,21 +137,26 @@ def stage_sums(cascade: Cascade, cascade_static: Cascade, s0: int, s1: int,
                ii_flat: jax.Array, img: jax.Array, base: jax.Array,
                stride: jax.Array, ys: jax.Array, xs: jax.Array,
                inv_sigma: jax.Array, *, backend: str = "bulk",
-               interpret: bool = True) -> jax.Array:
+               tile: tuple = (), interpret: bool = True) -> jax.Array:
     """(s1 - s0, cap) vote sums for stages ``[s0, s1)`` over a packed list.
 
     One call per tail *segment*: stage thresholds are applied by the
     caller between rows, so evaluating the whole run at once is exact (the
     packed list is only recompacted at segment boundaries).  ``backend``
     picks the execution strategy; all three produce bit-identical rows.
-    ``cascade`` carries (possibly traced) parameter arrays; the *static*
-    twin provides the stage boundaries needed at trace time.
+    ``tile`` is the pallas backend's lane-block shape (empty = the package
+    default; the engines pass the autotuned ``plan.lane_block``) — lane
+    blocking never changes the per-window arithmetic, so every tile is
+    bit-identical too.  ``cascade`` carries (possibly traced) parameter
+    arrays; the *static* twin provides the stage boundaries needed at
+    trace time.
     """
     if backend == "pallas":
         from . import ops
+        kw = {"tile": tuple(tile)} if tile else {}
         return ops.packed_stage_sums(
             cascade, cascade_static, s0, s1, ii_flat, img, base, stride,
-            ys, xs, inv_sigma, interpret=interpret)
+            ys, xs, inv_sigma, interpret=interpret, **kw)
     bounds = np.asarray(cascade_static.stage_offsets)
     if backend == "bulk":
         fn = _bulk_stage_sum

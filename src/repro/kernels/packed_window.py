@@ -45,7 +45,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.cascade import WINDOW
 
-DEFAULT_TILE = (8, 128)
+from .autotune import DEFAULT_TILE
 _AREA = float(WINDOW * WINDOW)
 
 

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cascade import WINDOW
-from repro.core.integral import rect_sum
+from repro.core.integral import CENTRE, rect_sum
 
 _AREA = float(WINDOW * WINDOW)
 
@@ -66,6 +66,46 @@ def dense_stage_sums_ref(rect_xywh: jax.Array, rect_w: jax.Array,
 
     init = jnp.zeros((ny, nx), jnp.float32)
     return jax.lax.fori_loop(0, rect_xywh.shape[0], body, init)
+
+
+# ----------------------------------------------------------------- fused
+def fused_head_ref(rect_xywh: jax.Array, rect_w: jax.Array,
+                   wc_threshold: jax.Array, left_val: jax.Array,
+                   right_val: jax.Array, rel_bounds: tuple,
+                   img: jax.Array):
+    """Oracle twin of the fused dense-head megakernel
+    (kernels/fused_head.py): the split path composed from this module's
+    own pieces.  The weak-classifier arrays cover one dense stage run;
+    ``rel_bounds`` are its per-stage boundaries.  Returns
+    ``(ii, inv_sigma, sums)`` — the (H+1, W+1) padded SAT, the (ny, nx)
+    1/sigma grid, and (n_run, ny, nx) per-stage vote sums.
+    """
+    img = img.astype(jnp.float32)
+    h, w = img.shape
+    ny, nx = h - WINDOW + 1, w - WINDOW + 1
+    pad = ((1, 0), (1, 0))
+    ii = jnp.pad(integral_image_ref(img), pad)
+    centred = img - CENTRE
+    ii2 = jnp.pad(integral_image_ref(centred * centred), pad)
+    iic = jnp.pad(integral_image_ref(centred), pad)
+    inv = window_inv_sigma_ref(ii2, iic, ny, nx)
+    sums = jnp.stack([
+        dense_stage_sums_ref(rect_xywh[a:b], rect_w[a:b],
+                             wc_threshold[a:b], left_val[a:b],
+                             right_val[a:b], ii, inv)
+        for a, b in zip(rel_bounds[:-1], rel_bounds[1:])])
+    return ii, inv, sums
+
+
+def fused_head_batch_ref(rect_xywh: jax.Array, rect_w: jax.Array,
+                         wc_threshold: jax.Array, left_val: jax.Array,
+                         right_val: jax.Array, rel_bounds: tuple,
+                         imgs: jax.Array):
+    """(B, H, W) stack -> per-image :func:`fused_head_ref` (oracle twin of
+    the batched fused-head wrapper, same per-image contract)."""
+    return jax.vmap(lambda im: fused_head_ref(
+        rect_xywh, rect_w, wc_threshold, left_val, right_val, rel_bounds,
+        im))(imgs)
 
 
 # ---------------------------------------------------------------- packed

@@ -19,7 +19,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.cascade import WINDOW
 
-DEFAULT_TILE = (8, 128)
+from .autotune import DEFAULT_TILE
 _N = float(WINDOW * WINDOW)
 
 

@@ -8,6 +8,7 @@ from .compiler import (CAP_FLOOR, BATCH_CAP_FLOOR,  # noqa: F401
                        STREAM_CAP_BASE, compile_level_plan, compile_plan,
                        level_capacities, n_compactions, plan_cache_info,
                        segment_spans, segment_work_units, select_backend,
+                       select_head_mode,
                        shared_capacities, stream_budget, stream_capacity_rung,
                        validate_config, window_limits)
 from .geometry import StreamGeometry, LevelSubset  # noqa: F401

@@ -14,7 +14,12 @@ engines used to re-derive independently lives here, once:
   power-of-two rungs (:func:`stream_capacity_rung`, :func:`stream_budget`);
 - the per-segment / per-rung packed-tail backend decision from the
   measured ``EngineConfig.tail_rungs`` crossover ladder
-  (:func:`select_backend`).
+  (:func:`select_backend`);
+- the per-level dense-head execution mode — fused megakernel vs split
+  three-dispatch path — from the measured ``EngineConfig.head_rungs``
+  crossover ladder (:func:`select_head_mode`), plus resolution of the
+  autotuned ``head_tile`` / ``lane_block`` shapes the executors hand the
+  kernels.
 
 Plans are cached (``functools.lru_cache``) on their full identity, so a
 plan object — and its ``key`` — is stable across calls: executors key
@@ -35,7 +40,8 @@ from .ir import CascadePlan, LevelPlan, LevelWavePlan, SegmentPlan, SlotLayout
 
 __all__ = ["CAP_FLOOR", "BATCH_CAP_FLOOR", "STREAM_CAP_BASE",
            "segment_spans", "n_compactions", "level_capacities",
-           "shared_capacities", "select_backend", "validate_config",
+           "shared_capacities", "select_backend", "select_head_mode",
+           "validate_config",
            "window_limits", "compile_level_plan", "compile_plan",
            "stream_capacity_rung", "stream_budget", "segment_work_units",
            "plan_cache_info"]
@@ -171,6 +177,43 @@ def select_backend(config, n_windows: int) -> str:
     return rungs[-1][1]
 
 
+def select_head_mode(config, n_windows: int) -> str:
+    """Dense-head execution mode for a level of ``n_windows`` windows.
+
+    ``"fused"`` runs the one-dispatch megakernel
+    (:func:`repro.kernels.ops.fused_head`); ``"split"`` the jnp SAT +
+    inv-sigma + per-stage haar_stage path.  Only stride-1 Pallas heads
+    have the fused option — strided / non-Pallas configs always split.
+    ``config.head_mode`` forces a mode; ``"auto"`` walks the calibrated
+    ``config.head_rungs`` ladder — ((max_windows, mode), ...) ascending,
+    from ``calibrated(tune_head=True)`` — picking the smallest rung
+    holding the level (the last rung's mode beyond the ladder).  An empty
+    ladder defaults to ``fused`` (one dispatch strictly dominates three
+    on every level measured so far; the ladder exists for hardware where
+    that stops holding).
+    """
+    if not (getattr(config, "use_pallas", False) and config.step == 1):
+        return "split"
+    m = getattr(config, "head_mode", "auto")
+    if m != "auto":
+        return m
+    rungs = getattr(config, "head_rungs", ())
+    if not rungs:
+        return "fused"
+    for max_windows, mode in rungs:
+        if n_windows <= max_windows:
+            return mode
+    return rungs[-1][1]
+
+
+def _resolve_tile(t) -> tuple[int, ...]:
+    """Tuned tile shape -> concrete (ty, tx); () means package default."""
+    if t:
+        return tuple(int(v) for v in t)
+    from repro.kernels.autotune import DEFAULT_TILE
+    return DEFAULT_TILE
+
+
 # ------------------------------------------------------------- validation
 def validate_config(n_stages: int, config) -> None:
     """Fail fast on malformed capacity schedules / tail policy instead of
@@ -198,6 +241,17 @@ def validate_config(n_stages: int, config) -> None:
         raise ValueError(
             f"EngineConfig.tail_backend must be one of "
             f"{BACKENDS + ('auto',)}, got {config.tail_backend!r}")
+    hm = getattr(config, "head_mode", "auto")
+    if hm not in ("auto", "fused", "split"):
+        raise ValueError(
+            f"EngineConfig.head_mode must be 'auto', 'fused' or 'split', "
+            f"got {hm!r}")
+    for name in ("head_tile", "lane_block"):
+        t = getattr(config, name, ())
+        if t and (len(t) != 2 or any(int(v) <= 0 for v in t)):
+            raise ValueError(
+                f"EngineConfig.{name} must be () or a (ty, tx) pair of "
+                f"positive ints, got {tuple(t)!r}")
 
 
 # --------------------------------------------------------------- geometry
@@ -261,8 +315,11 @@ def compile_level_plan(config, n_stages: int, h: int, w: int
             segments.append(SegmentPlan(
                 s0, s1, False, caps[min(ki, len(caps) - 1)]))
             ki += 1
+    n_dense = sum(s1 - s0 for (s0, s1, d) in spans if d)
+    hm = select_head_mode(config, ny * nx) if n_dense else "split"
     key = ("level", h, w, n_stages, config)
-    return LevelWavePlan(key, h, w, step, ny, nx, tuple(segments), caps)
+    return LevelWavePlan(key, h, w, step, ny, nx, tuple(segments), caps,
+                         hm, _resolve_tile(getattr(config, "head_tile", ())))
 
 
 @lru_cache(maxsize=4096)
@@ -303,9 +360,16 @@ def compile_plan(config, n_stages: int, hp: int, wp: int, batch: int = 1,
         segments = (SegmentPlan(0, n_stages, False, capacity,
                                 select_backend(config, capacity)),)
 
+    dense_prefix_n = sum(seg.s1 - seg.s0 for seg in segments if seg.dense)
+    head_modes = tuple(
+        select_head_mode(config, levels_all[li].n_windows)
+        if dense_prefix_n else "split"
+        for li in active)
     key = ("cascade", hp, wp, batch, levels, capacity, n_stages, config)
     return CascadePlan(key, hp, wp, batch, step, levels_all, active,
-                       segments, caps, layout)
+                       segments, caps, layout, head_modes,
+                       _resolve_tile(getattr(config, "head_tile", ())),
+                       _resolve_tile(getattr(config, "lane_block", ())))
 
 
 def plan_cache_info() -> dict:

@@ -130,12 +130,16 @@ class CascadePlan:
     """
 
     __slots__ = ("key", "hp", "wp", "batch", "step", "levels_all", "active",
-                 "levels", "segments", "capacities", "layout")
+                 "levels", "segments", "capacities", "layout", "head_modes",
+                 "head_tile", "lane_block")
 
     def __init__(self, key: tuple, hp: int, wp: int, batch: int, step: int,
                  levels_all: tuple[LevelPlan, ...], active: tuple[int, ...],
                  segments: tuple[SegmentPlan, ...],
-                 capacities: tuple[int, ...], layout: SlotLayout):
+                 capacities: tuple[int, ...], layout: SlotLayout,
+                 head_modes: tuple[str, ...] = (),
+                 head_tile: tuple[int, ...] = (),
+                 lane_block: tuple[int, ...] = ()):
         self.key = key
         self.hp, self.wp = hp, wp
         self.batch = batch
@@ -146,6 +150,14 @@ class CascadePlan:
         self.segments = segments
         self.capacities = capacities
         self.layout = layout
+        # per-active-level dense-head execution mode ("fused" megakernel vs
+        # "split" three-dispatch path) plus the tuned tile shapes the
+        # executors pass straight to the kernels; defaults mean "split with
+        # package-default tiles" so pre-head-mode constructors stay valid
+        self.head_modes = (head_modes if head_modes
+                           else ("split",) * len(self.levels))
+        self.head_tile = head_tile
+        self.lane_block = lane_block
 
     @property
     def n_slots(self) -> int:
@@ -200,7 +212,11 @@ class LevelWavePlan(NamedTuple):
     """Plan of the single-image per-level wave program: dense window grid
     plus the per-compaction capacity ladder (fractions of *this* level's
     window count — the batched engine instead shares
-    :attr:`CascadePlan.capacities` across the whole stack)."""
+    :attr:`CascadePlan.capacities` across the whole stack).  ``head_mode``
+    is this level's dense-head execution choice ("fused" megakernel vs
+    "split" three-dispatch path, from the measured crossover) and
+    ``head_tile`` the tuned tile shape the executor hands the kernel
+    (empty = package default)."""
     key: tuple
     height: int
     width: int
@@ -209,6 +225,8 @@ class LevelWavePlan(NamedTuple):
     nx: int
     segments: tuple[SegmentPlan, ...]
     capacities: tuple[int, ...]
+    head_mode: str = "split"
+    head_tile: tuple = ()
 
     @property
     def n_windows(self) -> int:

@@ -8,6 +8,10 @@ consumed by the DVFS optimizer (Table I's error constraint).
 Matching criterion: a detection matches a ground-truth face if IoU ≥ 0.4
 (one-to-one, greedy by IoU) — the usual box-matching rule; the paper counts
 per-image FP/FN the same way against its labelled databases.
+
+Naming note: this is the *accuracy* autotuner.  Kernel block-shape
+autotuning (head tiles, packed-tail lane blocks) lives in
+:mod:`repro.kernels.autotune`, next to the kernels it tunes.
 """
 
 from __future__ import annotations

@@ -171,7 +171,7 @@ class StreamEngine:
             ss_run = packed_tail.stage_sums(
                 cascade, cascade_static, seg.s0, seg.s1, ii_flat, b_sel,
                 base_sel, stride_sel, y_sel, x_sel, inv_sel,
-                backend=backend, interpret=interpret)
+                backend=backend, tile=plan.lane_block, interpret=interpret)
             for j, s in enumerate(range(seg.s0, seg.s1)):
                 valid = valid & (ss_run[j] >= cascade.stage_threshold[s])
             # scatter survivors back onto the full (B, n_slots) grid; dead

@@ -1,0 +1,9 @@
+"""Fixture: LANE_BLOCK narrowed scope — a kernel module other than
+kernels/autotune.py hardcoding the tile literal is now flagged (the
+autotuner's candidate table is the single permitted home)."""
+
+TILE = (8, 128)
+
+
+def kernel_with_hardcoded_tile(x):
+    return x.reshape(TILE)

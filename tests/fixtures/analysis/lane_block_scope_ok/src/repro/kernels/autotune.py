@@ -1,0 +1,5 @@
+"""Fixture: LANE_BLOCK narrowed scope — kernels/autotune.py is the single
+permitted home of the tile / candidate-table literals."""
+
+DEFAULT_TILE = (8, 128)
+HEAD_TILE_CANDIDATES = ((8, 128), (16, 128), (8, 256))

@@ -47,6 +47,18 @@ def test_clean_twin_stays_clean(fixture):
     assert res.findings == [], rules
 
 
+def test_lane_block_scope_fixture_tree():
+    # narrowed scope: kernels/ modules other than autotune.py are flagged;
+    # the autotuner module itself (home of the candidate table) stays clean
+    res, rules = run(FIX / "lane_block_scope_bad", select=["LANE_BLOCK"])
+    assert rules == ["LANE_BLOCK"]
+    assert len(res.findings) == 1
+    assert res.findings[0].path.endswith("some_kernel.py")
+    assert "autotune" in res.findings[0].message
+    res, rules = run(FIX / "lane_block_scope_ok", select=["LANE_BLOCK"])
+    assert res.findings == [], rules
+
+
 def test_kernel_oracle_fixture_tree():
     res, rules = run(FIX / "kernel_oracle_bad")
     assert rules == ["KERNEL_REF_TEST", "KERNEL_REF_TWIN"]

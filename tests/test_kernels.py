@@ -180,3 +180,102 @@ def test_window_inv_sigma_grid_batch_vs_oracle_twin():
     want = ref.window_inv_sigma_grid_batch_ref(pairs, ny, nx)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------------------------------------------ fused
+N_RUN = min(3, CASC.n_stages)     # the megakernel's dense stage run
+
+
+def test_fused_head_vs_oracle_twin():
+    """ops.fused_head vs ref.fused_head_ref on a non-tile-aligned grid
+    (ny=17, nx=33), all three outputs."""
+    h, w = 40, 56
+    rng = np.random.default_rng(23)
+    img = jnp.asarray(rng.integers(0, 255, (h, w)).astype(np.float32))
+    ii, inv, sums = ops.fused_head(CASC, CASC, 0, N_RUN, img,
+                                   interpret=True)
+    ii_r, inv_r, sums_r = ops.fused_head_ref(CASC, CASC, 0, N_RUN, img)
+    assert sums.shape == (N_RUN, h - 24 + 1, w - 24 + 1)
+    np.testing.assert_allclose(np.asarray(ii), np.asarray(ii_r),
+                               rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(inv), np.asarray(inv_r),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(sums_r),
+                               rtol=1e-4, atol=1e-3)
+    # the module-level oracle twin is the same function ops re-exports
+    ii_m, inv_m, sums_m = ref.fused_head_ref(
+        CASC.rect_xywh[:CASC.stage_offsets[N_RUN]],
+        CASC.rect_w[:CASC.stage_offsets[N_RUN]],
+        CASC.wc_threshold[:CASC.stage_offsets[N_RUN]],
+        CASC.left_val[:CASC.stage_offsets[N_RUN]],
+        CASC.right_val[:CASC.stage_offsets[N_RUN]],
+        tuple(int(b) for b in CASC.stage_offsets[:N_RUN + 1]), img)
+    np.testing.assert_array_equal(np.asarray(sums_r), np.asarray(sums_m))
+
+
+def test_fused_head_batch_vs_oracle_twin():
+    rng = np.random.default_rng(29)
+    imgs = jnp.asarray(rng.integers(0, 255, (3, 40, 56)).astype(np.float32))
+    ii, inv, sums = ops.fused_head_batch(CASC, CASC, 0, N_RUN, imgs,
+                                         interpret=True)
+    ii_r, inv_r, sums_r = ops.fused_head_batch_ref(CASC, CASC, 0, N_RUN,
+                                                   imgs)
+    assert sums.shape == (3, N_RUN, 40 - 24 + 1, 56 - 24 + 1)
+    np.testing.assert_allclose(np.asarray(ii), np.asarray(ii_r),
+                               rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(inv), np.asarray(inv_r),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(sums_r),
+                               rtol=1e-4, atol=1e-3)
+    assert "fused_head_batch_ref" in dir(ref)
+    # each slice bit-equal to the single-image kernel (batch = vmap of it)
+    for i in range(3):
+        one = ops.fused_head(CASC, CASC, 0, N_RUN, imgs[i], interpret=True)
+        for got_b, want_b in zip((ii[i], inv[i], sums[i]), one):
+            np.testing.assert_array_equal(np.asarray(got_b),
+                                          np.asarray(want_b))
+
+
+@pytest.mark.parametrize("hw", [(40, 56), (25, 25), (31, 140)])
+def test_fused_head_bit_identical_to_split_path(hw):
+    """The engine's bit-exactness contract: under jit, the fused megakernel
+    reproduces the split three-dispatch path (jnp SAT + jnp 1/sigma + one
+    haar_stage dispatch per stage) to the last ulp, on tile-aligned and
+    non-tile-aligned grids alike."""
+    from repro.core.integral import window_inv_sigma
+
+    h, w = hw
+    rng = np.random.default_rng(h * 31 + w)
+    img = jnp.asarray(rng.integers(0, 255, (h, w)).astype(np.float32))
+    ny, nx = h - 24 + 1, w - 24 + 1
+
+    def split(c, im):
+        ii, pair = integral_images(im)
+        inv = window_inv_sigma(pair, jnp.arange(ny)[:, None],
+                               jnp.arange(nx)[None, :], 24)
+        sums = jnp.stack([ops.dense_stage_sums(c, CASC, s, ii, inv,
+                                               interpret=True)
+                          for s in range(N_RUN)])
+        return ii, inv, sums
+
+    def fused(c, im):
+        return ops.fused_head(c, CASC, 0, N_RUN, im, interpret=True)
+
+    want = jax.jit(split)(CASC, img)
+    got = jax.jit(fused)(CASC, img)
+    for g, wnt in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wnt))
+
+
+@pytest.mark.parametrize("tile", [(16, 128), (8, 256)])
+def test_fused_head_tile_shape_does_not_change_bits(tile):
+    """Autotuned block shapes are bit-exact-safe by construction: every
+    per-window operation is elementwise over the tile, so racing candidate
+    shapes can never change what the cascade computes."""
+    rng = np.random.default_rng(37)
+    img = jnp.asarray(rng.integers(0, 255, (40, 56)).astype(np.float32))
+    base = ops.fused_head(CASC, CASC, 0, N_RUN, img, interpret=True)
+    other = ops.fused_head(CASC, CASC, 0, N_RUN, img, tile=tile,
+                           interpret=True)
+    for g, wnt in zip(other, base):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wnt))

@@ -220,6 +220,83 @@ def test_packed_tail_select_backend_delegates_to_plan():
                 == planlib.select_backend(cfg, n))
 
 
+# --------------------------------------------------- head-mode decisions
+PALL = CFG._replace(use_pallas=True, step=1)
+HEAD_LADDER = ((100, "fused"), (1000, "split"), (10 ** 6, "fused"))
+
+
+def test_head_modes_compiled_into_plan():
+    # forced modes win at every level (level plans and batch plans alike)
+    for forced in ("fused", "split"):
+        cfg = PALL._replace(head_mode=forced)
+        plan = planlib.compile_plan(cfg, N_STAGES, 64, 64)
+        assert set(plan.head_modes) == {forced}
+        assert len(plan.head_modes) == len(plan.levels)
+        lp = planlib.compile_level_plan(cfg, N_STAGES, 64, 64)
+        assert lp.head_mode == forced
+    # auto + empty ladder -> fused; a calibrated ladder is walked by the
+    # level's window count exactly like the tail's crossover rungs
+    assert planlib.select_head_mode(PALL, 10) == "fused"
+    tuned = PALL._replace(head_rungs=HEAD_LADDER)
+    assert planlib.select_head_mode(tuned, 50) == "fused"
+    assert planlib.select_head_mode(tuned, 500) == "split"
+    assert planlib.select_head_mode(tuned, 10 ** 7) == "fused"  # past end
+    plan = planlib.compile_plan(tuned, N_STAGES, 96, 96)
+    assert plan.head_modes == tuple(
+        planlib.select_head_mode(tuned, lp.n_windows) for lp in plan.levels)
+    # strided / non-Pallas configs never get the fused option
+    assert planlib.select_head_mode(CFG, 10 ** 6) == "split"
+    assert planlib.select_head_mode(CFG._replace(step=1), 10) == "split"
+    for cfg in (CFG, CFG._replace(step=1),
+                PALL._replace(use_pallas=False, head_mode="fused")):
+        assert set(planlib.compile_plan(cfg, N_STAGES, 64, 64).head_modes) \
+            == {"split"}
+
+
+def test_head_mode_needs_dense_prefix():
+    # a tail-only rung plan (dense=False everywhere) has no dense head to
+    # fuse: compiled mode is split regardless of the forced config
+    cfg = PALL._replace(head_mode="fused", tail_backend="auto",
+                        tail_rungs=LADDER)
+    sp = planlib.compile_plan(cfg, N_STAGES, 96, 96, levels=(0,),
+                              capacity=512)
+    assert not any(seg.dense for seg in sp.segments)
+    assert set(sp.head_modes) == {"split"}
+
+
+def test_tuned_shapes_key_plans_and_rebuild_once():
+    """Two calibration profiles differing only in tuned shapes must compile
+    to distinct plans (distinct ``plan.key``s), carry the tuned shapes, and
+    each build programs exactly once — zero rebuilds on repeat."""
+    a = planlib.compile_plan(PALL, N_STAGES, 64, 64)
+    b = planlib.compile_plan(PALL._replace(head_tile=(16, 128)),
+                             N_STAGES, 64, 64)
+    c = planlib.compile_plan(PALL._replace(lane_block=(8, 256)),
+                             N_STAGES, 64, 64)
+    d = planlib.compile_plan(PALL._replace(head_rungs=HEAD_LADDER),
+                             N_STAGES, 64, 64)
+    assert len({a.key, b.key, c.key, d.key}) == 4
+    assert b.head_tile == (16, 128) and c.lane_block == (8, 256)
+    rng = np.random.default_rng(7)
+    imgs = [render_scene(rng, 64, 64, n_faces=1)[0] for _ in range(3)]
+    ref = None
+    for cfg in (PALL, PALL._replace(head_tile=(16, 128),
+                                    lane_block=(8, 256))):
+        det = Detector(CASC, cfg)
+        got = [det.detect(imgs[0]), det.detect_batch(imgs)]
+        builds = det.program_builds
+        assert builds > 0
+        assert [np.asarray(r) for r in det.detect_batch(imgs)]
+        det.detect(imgs[0])
+        assert det.program_builds == builds       # zero rebuilds on repeat
+        if ref is None:
+            ref = got
+        else:                                     # tuned shapes never
+            assert np.array_equal(ref[0], got[0])  # change the bits
+            for x, y in zip(ref[1], got[1]):
+                assert np.array_equal(x, y)
+
+
 # ------------------------------------------------- executor equivalence
 def test_forced_rung_backends_bit_identical_end_to_end():
     """The same stream evaluated under ladders that force different
@@ -240,6 +317,31 @@ def test_forced_rung_backends_bit_identical_end_to_end():
         else:
             for a, b in zip(ref, got):
                 assert np.array_equal(a, b), bk
+
+
+def test_forced_head_modes_bit_identical_end_to_end():
+    """Forcing the dense head fused vs split must leave every executor's
+    detections bit-identical — detect, both batch strategies, and the
+    threshold-0 streaming path (the head mode only changes *how* the dense
+    prefix runs, never what it computes)."""
+    video = make_video("moving_face", n_frames=3, h=64, w=64, seed=4)
+    rng = np.random.default_rng(11)
+    imgs = [render_scene(rng, 64, 64, n_faces=1)[0] for _ in range(2)]
+    ref = None
+    for hm in ("split", "fused"):
+        det = Detector(CASC, PALL._replace(head_mode=hm))
+        vd = VideoDetector(det, StreamConfig(tile=16, threshold=0.0,
+                                             keyframe_interval=0),
+                           engine=StreamEngine(det, 0.5))
+        got = ([det.detect(imgs[0])]
+               + list(det.detect_batch(imgs, strategy="packed"))
+               + list(det.detect_batch(imgs, strategy="vmap"))
+               + [vd.process(f)[0] for f, _gt in video])
+        if ref is None:
+            ref = got
+        else:
+            for a, b in zip(ref, got):
+                assert np.array_equal(a, b), hm
 
 
 def test_validate_config_through_plan():
