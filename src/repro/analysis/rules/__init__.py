@@ -11,6 +11,7 @@ from __future__ import annotations
 from . import (  # noqa: F401  (imported for their @register side effects)
     dead_store,
     deprecation,
+    host_sync,
     kernel_oracle,
     plan_contracts,
     trace_safety,

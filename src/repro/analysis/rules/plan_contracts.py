@@ -34,7 +34,7 @@ _DEFAULT_BACKENDS = ("gather", "bulk", "pallas")
 _BACKENDS_MODULE = "repro.kernels.packed_tail"
 
 _IR_TYPES = ("CascadePlan", "LevelWavePlan", "LevelPlan", "SegmentPlan",
-             "SlotLayout")
+             "SlotLayout", "StreamStatePlan")
 _LANE_BLOCK = (8, 128)  # repro: ignore[LANE_BLOCK] the rule's own definition of the flagged shape
 
 

@@ -22,13 +22,17 @@ from .haar_stage import haar_stage_sums_kernel
 from .window_variance import window_inv_sigma_kernel
 from .packed_window import packed_stage_sums_kernel
 from .fused_head import fused_head_kernel
+from .tile_change import (tile_change_mask_kernel,
+                          changed_window_map_kernel)
 
 __all__ = ["integral_image", "window_inv_sigma_grid", "dense_stage_sums",
            "integral_image_batch", "window_inv_sigma_grid_batch",
            "dense_stage_sums_batch", "dense_stage_sums_batch_ref",
            "packed_stage_sums", "packed_stage_sums_ref",
            "fused_head", "fused_head_ref",
-           "fused_head_batch", "fused_head_batch_ref"]
+           "fused_head_batch", "fused_head_batch_ref",
+           "tile_change_mask", "tile_change_mask_ref",
+           "changed_window_map", "changed_window_map_ref"]
 
 
 def _pad_to(x: jax.Array, mh: int, mw: int, mode: str = "edge") -> jax.Array:
@@ -330,3 +334,31 @@ def dense_stage_sums_batch_ref(cascade: Cascade, cascade_static: Cascade,
         cascade.rect_xywh[k0:k1], cascade.rect_w[k0:k1],
         cascade.wc_threshold[k0:k1], cascade.left_val[k0:k1],
         cascade.right_val[k0:k1], ii, inv_sigma_grid)
+
+
+@partial(jax.jit, static_argnames=("tile", "halo", "exact", "use_kernel"))
+def tile_change_mask(prev: jax.Array, cur: jax.Array, threshold=0.0, *,
+                     tile: int, halo: int = 0, exact: bool = True,
+                     use_kernel: bool = True
+                     ) -> tuple[jax.Array, jax.Array]:
+    """(changed, scores) tile grids of ``cur`` vs ``prev`` — the device
+    port of the host ``tile_change_scores`` + ``dilate_tiles`` pair
+    (one fused pass: SAT scoring, exact/threshold test, halo dilation)."""
+    if not use_kernel:
+        return ref.tile_change_mask_ref(prev, cur, threshold, tile=tile,
+                                        halo=halo, exact=exact)
+    return tile_change_mask_kernel(prev, cur, threshold, tile=tile,
+                                   halo=halo, exact=exact)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def changed_window_map(changed: jax.Array, ty0: jax.Array, ty1: jax.Array,
+                       tx0: jax.Array, tx1: jax.Array, valid: jax.Array,
+                       *, use_kernel: bool = True) -> jax.Array:
+    """Flat per-level window recompute mask from a changed-tile grid and
+    the plan-compiled receptive-field tile-range brackets — the device
+    port of the host ``changed_window_mask`` (integer SAT, exact)."""
+    if not use_kernel:
+        return ref.changed_window_map_ref(changed, ty0, ty1, tx0, tx1,
+                                          valid)
+    return changed_window_map_kernel(changed, ty0, ty1, tx0, tx1, valid)

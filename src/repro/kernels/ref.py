@@ -193,3 +193,49 @@ def window_inv_sigma_grid_batch_ref(ii_pairs: jax.Array, ny: int, nx: int,
     oracle twin of :func:`repro.kernels.ops.window_inv_sigma_grid_batch`."""
     return window_inv_sigma_batch_ref(ii_pairs[:, 0], ii_pairs[:, 1],
                                       ny, nx, window)
+
+
+# Oracle twins of the device tile-planning kernels (repro.kernels
+# .tile_change): independent algorithms — direct per-tile reshape
+# reductions instead of SAT corner lookups, and a boolean range-matmul
+# instead of the integer SAT — so a SAT indexing bug cannot hide in its
+# own oracle.  Masks match bit-for-bit; float *scores* agree to
+# summation-order tolerance (the kernel sums through a float32 SAT).
+
+def tile_change_mask_ref(prev: jax.Array, cur: jax.Array,
+                         threshold: jax.Array, *, tile: int, halo: int = 0,
+                         exact: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(changed, scores) per tile via direct zero-padded reshape sums."""
+    h, w = cur.shape
+    ty, tx = -(-h // tile), -(-w // tile)
+    d = cur.astype(jnp.float32) - prev.astype(jnp.float32)
+    pad = ((0, ty * tile - h), (0, tx * tile - w))
+    sq = jnp.pad(d * d, pad).reshape(ty, tile, tx, tile)
+    area = jnp.pad(jnp.ones((h, w), jnp.float32), pad
+                   ).reshape(ty, tile, tx, tile).sum(axis=(1, 3))
+    scores = sq.sum(axis=(1, 3)) / jnp.maximum(area, 1.0)
+    if exact:
+        changed = jnp.pad(d != 0.0, pad).reshape(
+            ty, tile, tx, tile).any(axis=(1, 3))
+    else:
+        changed = scores > threshold
+    for _ in range(halo):
+        changed = (changed
+                   | jnp.pad(changed[:-1, :], ((1, 0), (0, 0)))
+                   | jnp.pad(changed[1:, :], ((0, 1), (0, 0)))
+                   | jnp.pad(changed[:, :-1], ((0, 0), (1, 0)))
+                   | jnp.pad(changed[:, 1:], ((0, 0), (0, 1))))
+    return changed, scores
+
+
+def changed_window_map_ref(changed: jax.Array, ty0: jax.Array,
+                           ty1: jax.Array, tx0: jax.Array, tx1: jax.Array,
+                           valid: jax.Array) -> jax.Array:
+    """Flat window mask via explicit range-indicator integer matmuls."""
+    ty, tx = changed.shape
+    ry = ((jnp.arange(ty)[None, :] >= ty0[:, None])
+          & (jnp.arange(ty)[None, :] <= ty1[:, None])).astype(jnp.int32)
+    rx = ((jnp.arange(tx)[None, :] >= tx0[:, None])
+          & (jnp.arange(tx)[None, :] <= tx1[:, None])).astype(jnp.int32)
+    cnt = ry @ changed.astype(jnp.int32) @ rx.T
+    return (cnt > 0).reshape(-1) & valid

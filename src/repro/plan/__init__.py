@@ -3,9 +3,11 @@
 # backend choices), compiled once per (bucket, batch, subset, rung) and
 # consumed by thin executors in repro.core.engine and repro.stream.engine.
 from .ir import (CascadePlan, LevelPlan, LevelWavePlan,  # noqa: F401
-                 SegmentPlan, SlotLayout)
+                 SegmentPlan, SlotLayout, StreamStatePlan)
 from .compiler import (CAP_FLOOR, BATCH_CAP_FLOOR,  # noqa: F401
-                       STREAM_CAP_BASE, compile_level_plan, compile_plan,
+                       STREAM_CAP_BASE, STREAM_DECODE_CAP,
+                       compile_level_plan, compile_plan,
+                       compile_stream_plan,
                        level_capacities, n_compactions, plan_cache_info,
                        segment_spans, segment_work_units, select_backend,
                        select_head_mode,

@@ -32,17 +32,22 @@ from __future__ import annotations
 import math
 from functools import lru_cache
 
+import numpy as np
+
 from repro.core.cascade import WINDOW
 from repro.core.pyramid import pyramid_plan
 from repro.kernels.packed_tail import BACKENDS
 
-from .ir import CascadePlan, LevelPlan, LevelWavePlan, SegmentPlan, SlotLayout
+from .ir import (CascadePlan, LevelPlan, LevelWavePlan, SegmentPlan,
+                 SlotLayout, StreamStatePlan)
 
 __all__ = ["CAP_FLOOR", "BATCH_CAP_FLOOR", "STREAM_CAP_BASE",
+           "STREAM_DECODE_CAP",
            "segment_spans", "n_compactions", "level_capacities",
            "shared_capacities", "select_backend", "select_head_mode",
            "validate_config",
            "window_limits", "compile_level_plan", "compile_plan",
+           "compile_stream_plan",
            "stream_capacity_rung", "stream_budget", "segment_work_units",
            "plan_cache_info"]
 
@@ -56,6 +61,11 @@ BATCH_CAP_FLOOR = 128
 # knows the exact changed-window count before dispatch, so stream programs
 # compile a few power-of-two capacities and pick the smallest that fits.
 STREAM_CAP_BASE = 512
+
+# static length of the decoded-survivor slot list a device-resident stream
+# step ships back per frame (the only steady-state device->host transfer
+# besides the plan scalars); overflow falls back to a host full refresh
+STREAM_DECODE_CAP = 2048
 
 
 # ------------------------------------------------------------ segmentation
@@ -370,6 +380,53 @@ def compile_plan(config, n_stages: int, hp: int, wp: int, batch: int = 1,
                        segments, caps, layout, head_modes,
                        _resolve_tile(getattr(config, "head_tile", ())),
                        _resolve_tile(getattr(config, "lane_block", ())))
+
+
+@lru_cache(maxsize=1024)
+def compile_stream_plan(config, n_stages: int, hp: int, wp: int, h: int,
+                        w: int, tile: int, halo: int,
+                        decode_cap: int | None = None) -> StreamStatePlan:
+    """Compile the device-resident stream step's geometry for one
+    (bucket, true frame shape, tile, halo).
+
+    Precomputes everything the on-device frame planner gathers through:
+    the tile grid over the true (h, w) frame, each level's closed
+    tile-range brackets (``tile_range`` of the host
+    :func:`repro.stream.tiles.changed_window_mask`, vectorized over window
+    origins), the flat window-limit mask over the bucket's full slot
+    layout, and the live-window count (the host ``VideoDetector``'s
+    ``_n_live``).  ``decode_cap`` sizes the static decoded-survivor list
+    (default :data:`STREAM_DECODE_CAP`, clipped to the slot count).
+    """
+    step = config.step
+    levels_all = _pyramid_levels(hp, wp, config.scale_factor, step)
+    ty, tx = -(-h // tile), -(-w // tile)
+    ranges, valid_parts, n_live = [], [], 0
+    for lp in levels_all:
+        oy = np.arange(lp.ny, dtype=np.int64) * step
+        ox = np.arange(lp.nx, dtype=np.int64) * step
+        ty0 = np.clip(((oy * hp) // lp.height) // tile, 0, ty - 1)
+        ty1 = np.clip((((oy + WINDOW - 1) * hp) // lp.height) // tile,
+                      0, ty - 1)
+        tx0 = np.clip(((ox * wp) // lp.width) // tile, 0, tx - 1)
+        tx1 = np.clip((((ox + WINDOW - 1) * wp) // lp.width) // tile,
+                      0, tx - 1)
+        ranges.append((ty0.astype(np.int32), ty1.astype(np.int32),
+                       tx0.astype(np.int32), tx1.astype(np.int32)))
+        y_lim, x_lim = window_limits(h, w, lp.height, lp.width, hp, wp)
+        valid = (oy <= y_lim)[:, None] & (ox <= x_lim)[None, :]
+        valid_parts.append(valid.reshape(-1))
+        n_y = min(int(y_lim) // step + 1, lp.ny) if y_lim >= 0 else 0
+        n_x = min(int(x_lim) // step + 1, lp.nx) if x_lim >= 0 else 0
+        n_live += n_y * n_x
+    n_slots = sum(lp.n_windows for lp in levels_all)
+    limit_mask = (np.concatenate(valid_parts) if valid_parts
+                  else np.zeros(0, bool))
+    cap = decode_cap if decode_cap is not None else STREAM_DECODE_CAP
+    cap = max(1, min(cap, max(n_slots, 1)))
+    key = ("stream_state", hp, wp, h, w, tile, halo, cap, n_stages, config)
+    return StreamStatePlan(key, hp, wp, h, w, tile, halo, ty, tx,
+                           tuple(ranges), limit_mask, n_live, n_slots, cap)
 
 
 def plan_cache_info() -> dict:

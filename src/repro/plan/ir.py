@@ -32,7 +32,7 @@ from typing import NamedTuple
 import numpy as np
 
 __all__ = ["LevelPlan", "SegmentPlan", "SlotLayout", "CascadePlan",
-           "LevelWavePlan"]
+           "LevelWavePlan", "StreamStatePlan"]
 
 
 class LevelPlan(NamedTuple):
@@ -231,3 +231,53 @@ class LevelWavePlan(NamedTuple):
     @property
     def n_windows(self) -> int:
         return self.ny * self.nx
+
+
+class StreamStatePlan:
+    """Compiler-owned geometry of the device-resident stream step.
+
+    Everything the jitted ``plan_and_eval`` step (:meth:`repro.stream
+    .StreamEngine.stream_step`) needs beyond a :class:`CascadePlan`:
+    the tile grid covering the true (h, w) frame inside its (hp, wp)
+    bucket, the per-level closed tile-range brackets of each window
+    origin's receptive field (the host ``changed_window_mask``'s
+    ``tile_range`` tables, precomputed), the flat window-limit mask, the
+    live-window count the full-refresh fraction is measured against, and
+    the static capacity of the decoded-survivor slot list shipped back
+    to host each frame.  ``key`` is the plan's hashable identity — with
+    the evaluation rung and exactness flag it keys the compiled step
+    program.  :func:`repro.plan.compile_stream_plan` is the only
+    producer.
+    """
+
+    __slots__ = ("key", "hp", "wp", "h", "w", "tile", "halo", "ty", "tx",
+                 "level_tile_ranges", "limit_mask", "n_live", "n_slots",
+                 "decode_cap")
+
+    def __init__(self, key: tuple, hp: int, wp: int, h: int, w: int,
+                 tile: int, halo: int, ty: int, tx: int,
+                 level_tile_ranges: tuple, limit_mask: np.ndarray,
+                 n_live: int, n_slots: int, decode_cap: int):
+        self.key = key
+        self.hp, self.wp = hp, wp
+        self.h, self.w = h, w
+        self.tile, self.halo = tile, halo
+        self.ty, self.tx = ty, tx
+        # per level: (ty0, ty1, tx0, tx1) int32 closed tile-range brackets
+        self.level_tile_ranges = level_tile_ranges
+        self.limit_mask = limit_mask          # flat (n_slots,) bool
+        self.n_live = n_live
+        self.n_slots = n_slots
+        self.decode_cap = decode_cap
+
+    def __hash__(self):
+        return hash(self.key)
+
+    def __eq__(self, other):
+        return isinstance(other, StreamStatePlan) and self.key == other.key
+
+    def __repr__(self):
+        return (f"StreamStatePlan(hp={self.hp}, wp={self.wp}, h={self.h}, "
+                f"w={self.w}, tile={self.tile}, halo={self.halo}, "
+                f"grid=({self.ty}, {self.tx}), n_slots={self.n_slots}, "
+                f"n_live={self.n_live}, decode_cap={self.decode_cap})")

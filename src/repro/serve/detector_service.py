@@ -750,17 +750,28 @@ class DetectorService:
         """
         incr: list[tuple[Request, np.ndarray, object]] = []
         full: list[tuple[Request, np.ndarray]] = []
+        dev: list[tuple[Request, object]] = []
         for fr in shard:
+            video = fr.session.video
+            if video.config.device_state:
+                # submit first: jax dispatch is async, so every device
+                # session's plan-and-eval step runs while the host plans
+                # and packs the host-resident sessions below
+                try:
+                    dev.append((fr, video.submit(fr.image)))
+                except Exception as e:         # noqa: BLE001
+                    self._complete(fr, e)
+                continue
             try:
-                frame, plan = fr.session.video.plan_frame(fr.image)
+                frame, plan = video.plan_frame(fr.image)
             except Exception as e:             # noqa: BLE001
                 self._complete(fr, e)
                 continue
             if plan.mode == "cached":
-                rects, stats = fr.session.video.commit_cached(frame, plan)
+                rects, stats = video.commit_cached(frame, plan)
                 self._complete(fr, rects, stats)
             elif plan.mode == "full":
-                full.append((fr, frame))
+                full.append((fr, frame, None))
             else:
                 incr.append((fr, frame, plan))
 
@@ -787,36 +798,54 @@ class DetectorService:
                         self._complete(fr, e)
                     continue
                 if overflow:   # shared capacity blown: full-refresh chunk
-                    full.extend((fr, frame) for (fr, frame, _plan) in chunk)
+                    full.extend((fr, frame, None)
+                                for (fr, frame, _plan) in chunk)
                     continue
                 for (fr, frame, plan), bm in zip(chunk, bitmaps):
                     rects, stats = fr.session.video.commit_incremental(
                         frame, plan, bm)
                     self._complete(fr, rects, stats)
 
+        # ---- device-resident sessions, dispatched up-front: collect each
+        # step's verdict; cached/incremental frames finish straight off the
+        # device state, full-needed frames join the batched keyframe flush
+        for fr, tok in dev:
+            video = fr.session.video
+            try:
+                mode = video.poll(tok)
+                if mode == "full":
+                    # carry the step's device frame so the session's state
+                    # re-seed after the batched detect skips re-uploading it
+                    full.append((fr, video.discard_token(tok),
+                                 tok.dev_frame))
+                else:
+                    rects, stats = video.commit_token(tok)
+                    self._complete(fr, rects, stats)
+            except Exception as e:             # noqa: BLE001
+                self._complete(fr, e)
+
         # ---- keyframes / refreshes, batched through the raw batch path
         buckets = {}
-        for fr, frame in full:
-            buckets.setdefault(fr.session.plan_key,
-                               []).append((fr, frame))
+        for item in full:
+            buckets.setdefault(item[0].session.plan_key, []).append(item)
         for _hw, items in buckets.items():
             for chunk in self._chunks(items):
                 self._run_full_chunk(chunk)
 
-    def _run_full_chunk(self, chunk: list[tuple[Request, np.ndarray]]
-                        ) -> None:
+    def _run_full_chunk(self, chunk: list[tuple]) -> None:
         levels = None
         if len(chunk) > 1:
             try:
                 levels = self.detector.detect_batch_raw(
-                    [frame for _fr, frame in chunk])
+                    [frame for _fr, frame, _dev in chunk])
             except Exception:                  # noqa: BLE001
                 levels = None                  # isolate per frame below
-        for i, (fr, frame) in enumerate(chunk):
+        for i, (fr, frame, dev_frame) in enumerate(chunk):
             try:
                 wins = (level_windows_from_raw(levels, i)
                         if levels is not None else None)
-                rects, stats = fr.session.video.commit_full(frame, wins)
+                rects, stats = fr.session.video.commit_full(
+                    frame, wins, dev_frame=dev_frame)
                 self._complete(fr, rects, stats)
             except Exception as e:             # noqa: BLE001
                 self._complete(fr, e)

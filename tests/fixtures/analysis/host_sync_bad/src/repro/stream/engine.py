@@ -1,0 +1,11 @@
+"""Seeded HOST_SYNC fixture: three host syncs in the streaming hot path,
+none justified."""
+import numpy as np
+import jax
+
+
+def leaky_step(state, out):
+    bitmap = np.asarray(state.bitmap)          # sync 1: np.asarray
+    flags = jax.device_get(out.mode)           # sync 2: device_get
+    n = out.n_rec.item()                       # sync 3: .item()
+    return bitmap, flags, n

@@ -59,6 +59,21 @@ def test_lane_block_scope_fixture_tree():
     assert res.findings == [], rules
 
 
+def test_host_sync_fixture_tree():
+    # the streaming hot path (stream/engine.py, stream/video.py) may only
+    # touch the host at the transfer contract's named endpoints
+    res, rules = run(FIX / "host_sync_bad", select=["HOST_SYNC"])
+    assert rules == ["HOST_SYNC"]
+    assert len(res.findings) == 3
+    assert all(f.path.endswith("stream/engine.py") for f in res.findings)
+    msgs = " ".join(f.message for f in res.findings)
+    assert "np.asarray" in msgs and "device_get" in msgs and ".item()" in msgs
+    res, rules = run(FIX / "host_sync_ok", select=["HOST_SYNC"])
+    assert res.findings == [], rules
+    # the justified contract sync is recognised, not silently out of scope
+    assert [f.rule for f in res.suppressed] == ["HOST_SYNC"]
+
+
 def test_kernel_oracle_fixture_tree():
     res, rules = run(FIX / "kernel_oracle_bad")
     assert rules == ["KERNEL_REF_TEST", "KERNEL_REF_TWIN"]
@@ -128,4 +143,5 @@ def test_registry_covers_documented_rules():
     assert set(rule_ids()) >= {
         "TRACE_BRANCH", "TRACE_CONCRETE", "JIT_CACHE", "TAIL_BACKEND",
         "PLAN_GEOMETRY", "LANE_BLOCK", "KERNEL_REF_TWIN",
-        "KERNEL_REF_TEST", "DEPRECATED_SURFACE", "DEAD_STORE"}
+        "KERNEL_REF_TEST", "DEPRECATED_SURFACE", "DEAD_STORE",
+        "HOST_SYNC"}

@@ -1,0 +1,225 @@
+"""Device-resident stream state: the on-device tile-change kernels race
+their oracle twins and the host planners; `StreamConfig.device_state`
+streams are bit-identical to the host-planned path (and to per-frame
+``detect``) at threshold 0 across every synthetic scenario, through the
+pipelined submit/retire API, the rung-retry loop, and the decode-overflow
+fallback; the donated state reuses its buffers with zero steady-state
+program builds; and serving sessions report identical stream stats
+either way."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import Detector, EngineConfig, paper_shaped_cascade
+from repro.kernels.ops import (tile_change_mask, changed_window_map)
+from repro.kernels.ref import (tile_change_mask_ref, changed_window_map_ref)
+from repro.serve import DetectorService, PodSpec, ServiceConfig
+from repro.stream import (SCENARIOS, StreamConfig, StreamEngine,
+                          VideoDetector, make_video, tile_change_scores,
+                          dilate_tiles)
+
+CASC = paper_shaped_cascade(0, stage_sizes=[3, 4, 5, 6, 8])
+KW = dict(step=2, scale_factor=1.3, min_neighbors=2)
+HW = 96
+HOST_CFG = StreamConfig(tile=12, threshold=0.0, keyframe_interval=4)
+DEV_CFG = HOST_CFG._replace(device_state=True)
+
+
+@pytest.fixture(scope="module")
+def detector():
+    return Detector(CASC, EngineConfig(mode="wave", **KW))
+
+
+def frames_of(kind, n=10, seed=3, h=HW, w=HW):
+    return [f for f, _gt in make_video(kind, n_frames=n, h=h, w=w,
+                                       seed=seed)]
+
+
+# ------------------------------------------------- kernels vs oracles/host
+@pytest.mark.parametrize("exact", [True, False])
+@pytest.mark.parametrize("halo", [0, 1])
+def test_tile_change_mask_matches_ref_and_host(exact, halo):
+    rng = np.random.default_rng(0)
+    prev = rng.random((50, 70), np.float32)
+    cur = prev.copy()
+    cur[12:19, 33:41] += 0.5          # a localized change
+    cur[40, 2] += 1e-3                # a single-pixel tickle
+    thr = 0.0 if exact else 1e-4
+    changed, scores = tile_change_mask(prev, cur, thr, tile=12, halo=halo,
+                                       exact=exact)
+    changed_r, scores_r = tile_change_mask_ref(prev, cur, thr, tile=12,
+                                               halo=halo, exact=exact)
+    assert np.array_equal(np.asarray(changed), np.asarray(changed_r))
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(scores_r),
+                               rtol=1e-5, atol=1e-7)
+    # exact mode matches the host planner's bit-for-bit change test
+    if exact:
+        _s, host_any = tile_change_scores(prev, cur, 12, exact=True)
+        host = dilate_tiles(host_any, halo)
+        assert np.array_equal(np.asarray(changed), host)
+
+
+def test_changed_window_map_matches_ref():
+    # windows form a (ny, nx) grid with separable inclusive tile ranges:
+    # rows share ty0/ty1, columns share tx0/tx1 (the streaming layout)
+    rng = np.random.default_rng(1)
+    ty, tx, ny, nx = 7, 9, 6, 8
+    changed = rng.random((ty, tx)) < 0.3
+    ty0 = rng.integers(0, ty, ny).astype(np.int32)
+    ty1 = np.minimum(ty0 + rng.integers(0, 3, ny), ty - 1).astype(np.int32)
+    tx0 = rng.integers(0, tx, nx).astype(np.int32)
+    tx1 = np.minimum(tx0 + rng.integers(0, 3, nx), tx - 1).astype(np.int32)
+    valid = rng.random(ny * nx) < 0.9
+    got = changed_window_map(changed, ty0, ty1, tx0, tx1, valid)
+    want = changed_window_map_ref(changed, ty0, ty1, tx0, tx1, valid)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # brute-force oracle on top: any changed tile in the inclusive range
+    brute = np.array([valid[i * nx + j] and changed[ty0[i]:ty1[i] + 1,
+                                                    tx0[j]:tx1[j] + 1].any()
+                      for i in range(ny) for j in range(nx)])
+    assert np.array_equal(np.asarray(got), brute)
+
+
+# ------------------------------------------------------- bit-identity
+@pytest.mark.parametrize("kind", SCENARIOS)
+def test_device_stream_bit_identical_to_host_and_detect(detector, kind):
+    vh = VideoDetector(detector, HOST_CFG)
+    vd = VideoDetector(detector, DEV_CFG)
+    for f in frames_of(kind):
+        rh, sh = vh.process(f)
+        rd, sd = vd.process(f)
+        assert np.array_equal(rh, rd)
+        assert sh == sd                  # mode, counters, level accounting
+        assert np.array_equal(rd, detector.detect(f))
+    assert vd.xfer_bytes > 0             # the accounting actually ran
+
+
+@pytest.mark.parametrize("kind", SCENARIOS)
+def test_pipelined_submit_retire_matches_sequential(detector, kind):
+    # all-full streaks exercise the provisional ahead-dispatch (bitmap
+    # stale, verdict sound); mixed scenarios exercise its true-up when a
+    # successor's verdict commits after a full refresh
+    frames = frames_of(kind, n=12, seed=5)
+    seq = VideoDetector(detector, DEV_CFG)
+    pipe = VideoDetector(detector, DEV_CFG)
+    want = [seq.process(f) for f in frames]
+    got, prev = [], None
+    for f in frames:                     # depth-2 double-buffered loop
+        tok = pipe.submit(f)
+        if prev is not None:
+            got.append(pipe.retire(prev))
+        prev = tok
+    got.append(pipe.retire(prev))
+    for (rw, sw), (rg, sg) in zip(want, got):
+        assert np.array_equal(rw, rg) and sw == sg
+
+
+def test_retry_grows_rung_and_stays_identical(detector):
+    # static opening (tiny sticky rung) then a pan burst: the first burst
+    # frame overflows the compiled rung, retries at a larger one, and
+    # still commits the exact host result
+    cfg_h = HOST_CFG._replace(keyframe_interval=0, full_refresh_frac=0.95,
+                              max_changed_frac=0.95)
+    cfg_d = cfg_h._replace(device_state=True)
+    frames = (frames_of("static_cctv", n=3, seed=7)
+              + frames_of("camera_pan", n=3, seed=7))
+    vh, vd = VideoDetector(detector, cfg_h), VideoDetector(detector, cfg_d)
+    rung0 = None
+    for f in frames:
+        rh, sh = vh.process(f)
+        rd, sd = vd.process(f)
+        if rung0 is None:
+            rung0 = vd._dev_rung
+        assert np.array_equal(rh, rd) and sh == sd
+    assert vd._dev_rung > rung0          # the sticky rung actually grew
+
+
+def test_decode_overflow_falls_back_to_full(detector):
+    # decode_cap smaller than the survivor count: rects stay identical,
+    # the frame is just accounted as a full refresh
+    vh = VideoDetector(detector, HOST_CFG)
+    vd = VideoDetector(detector, DEV_CFG, decode_cap=4)
+    modes = []
+    for f in frames_of("moving_face", n=8, seed=9):
+        rh, _sh = vh.process(f)
+        rd, sd = vd.process(f)
+        modes.append(sd.mode)
+        assert np.array_equal(rh, rd)
+    assert set(modes) == {"full"}
+
+
+# ------------------------------------------------------------- residency
+def test_donated_state_reuses_buffers_and_programs(detector):
+    # a stream that settles into steady incremental frames: the donated
+    # state must recycle its buffers in place with no new program builds
+    eng = StreamEngine(detector, DEV_CFG.max_changed_frac)
+    vd = VideoDetector(detector, DEV_CFG._replace(keyframe_interval=0),
+                       engine=eng)
+    frames = frames_of("static_cctv", n=12, seed=11)
+    ptrs, builds, modes = [], [], []
+    for f in frames:
+        _r, s = vd.process(f)
+        modes.append(s.mode)
+        if vd._dev_state is not None:
+            ptrs.append(vd._dev_state.ref.unsafe_buffer_pointer())
+        builds.append(eng.program_builds)
+    assert modes[0] == "full" and set(modes[1:]) == {"incremental"}
+    # programs compiled by frame 2 (opening rung + one retry growth at
+    # most), then reused for every steady-state frame
+    assert builds[-1] == builds[2]
+    # donation: the reference-frame buffer is recycled in place
+    assert len(set(ptrs[2:])) == 1
+    # steady state fetches scalars + slots, never the ref/bitmap arrays
+    assert vd._ref is None and vd._bitmap is None
+
+
+def test_device_stream_api_guards(detector):
+    vd = VideoDetector(detector, DEV_CFG)
+    frame = frames_of("static_cctv", n=1)[0]
+    vd.process(frame)
+    with pytest.raises(RuntimeError, match="device-resident"):
+        vd.plan_frame(frame)
+    with pytest.raises(ValueError, match="device_state"):
+        vd.reconfigure(DEV_CFG._replace(device_state=False))
+    rects, _ = vd.process(frame)
+    with pytest.raises(ValueError):      # cached returns are read-only
+        rects[...] = 0
+    vh = VideoDetector(detector, HOST_CFG)
+    with pytest.raises(RuntimeError, match="device_state"):
+        vh.submit(frame)
+    vd.reset()                           # next frame re-opens cleanly
+    r2, s2 = vd.process(frame)
+    assert s2.mode == "full"
+    assert np.array_equal(r2, detector.detect(frame))
+
+
+# --------------------------------------------------------------- serving
+def test_service_sessions_identical_stats_either_way(detector):
+    videos = [frames_of(k, n=6, seed=s)
+              for s, k in enumerate(("static_cctv", "moving_face",
+                                     "camera_pan"))]
+    outs, stream_stats = [], []
+    for dev in (False, True):
+        svc = DetectorService(detector, ServiceConfig(
+            pods=(PodSpec("big", 1.0), PodSpec("little", 0.4)),
+            stream_config=HOST_CFG._replace(device_state=dev)))
+        sessions = [svc.open_stream() for _ in videos]
+        reqs = []
+        for t in range(6):
+            for sess, vid in zip(sessions, videos):
+                reqs.append(sess.submit_frame(vid[t]))
+        svc.flush()
+        outs.append([(r.result(), r.stats) for r in reqs])
+        stream_stats.append(svc.stats().stream.as_dict())
+    for (rh, sh), (rd, sd) in zip(*outs):
+        assert np.array_equal(rh, rd)
+        assert sh == sd
+    assert stream_stats[0] == stream_stats[1]
+
+
+def test_jax_default_backend_is_importable():
+    # the device path assumes a working jax backend; make the assumption
+    # explicit so failures here are legible
+    assert jax.default_backend() in ("cpu", "gpu", "tpu")
